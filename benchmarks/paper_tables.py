@@ -1,0 +1,100 @@
+"""Benchmarks reproducing the paper's tables/figures via the NoC sim.
+
+One function per paper artifact:
+  fig10_latency   — latency-per-inference speedup, 3 models x ANN/SNN/HNN
+  fig11_sweeps    — speedup vs bit-width / NoC dims / grouping
+  fig12_energy    — energy per inference + component breakdown
+  fig13_energy_sweeps — energy efficiency vs the same sweeps
+  fig7_sparsity   — latency improvement vs activation sparsity
+"""
+from __future__ import annotations
+
+import time
+
+from repro.sim.noc import NocConfig, NocSim, PAPER_MODELS
+
+MODELS = ("rwkv", "msresnet18", "efficientnet-b4")
+
+
+def _sim(model, mode, **kw):
+    layers = PAPER_MODELS[model]()
+    return NocSim(NocConfig(mode=mode, **kw)).simulate(layers)
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def fig10_latency(emit):
+    for m in MODELS:
+        (reps, us) = _timed(lambda: {x: _sim(m, x) for x in
+                                     ("ann", "snn", "hnn")})
+        a, s, h = reps["ann"], reps["snn"], reps["hnn"]
+        emit(f"fig10_latency/{m}/hnn_speedup", us,
+             f"{a.latency_s / h.latency_s:.3f}x")
+        emit(f"fig10_latency/{m}/snn_speedup", us,
+             f"{a.latency_s / s.latency_s:.3f}x")
+        emit(f"fig10_latency/{m}/latency_ms_hnn", us,
+             f"{h.latency_s * 1e3:.4f}")
+
+
+def fig11_sweeps(emit):
+    for m in MODELS:
+        for bits in (8, 16, 32):
+            (r, us) = _timed(lambda: (_sim(m, "ann", bits=bits),
+                                      _sim(m, "hnn", bits=bits)))
+            emit(f"fig11_bits/{m}/b{bits}", us,
+                 f"{r[0].latency_s / r[1].latency_s:.3f}x")
+        for cpc in (8, 16, 64):
+            (r, us) = _timed(lambda: (_sim(m, "ann", cores_per_chip=cpc),
+                                      _sim(m, "hnn", cores_per_chip=cpc)))
+            emit(f"fig11_noc/{m}/c{cpc}", us,
+                 f"{r[0].latency_s / r[1].latency_s:.3f}x")
+        for g in (64, 128, 256):
+            (r, us) = _timed(lambda: (_sim(m, "ann", neurons_per_core=g),
+                                      _sim(m, "hnn", neurons_per_core=g)))
+            emit(f"fig11_group/{m}/g{g}", us,
+                 f"{r[0].latency_s / r[1].latency_s:.3f}x")
+
+
+def fig12_energy(emit):
+    for m in MODELS:
+        (reps, us) = _timed(lambda: {x: _sim(m, x) for x in
+                                     ("ann", "snn", "hnn")})
+        a, h = reps["ann"], reps["hnn"]
+        emit(f"fig12_energy/{m}/hnn_gain", us,
+             f"{a.total_energy / h.total_energy:.3f}x")
+        bd = h.breakdown()
+        tot = sum(bd.values()) or 1.0
+        for k, v in bd.items():
+            emit(f"fig12_energy/{m}/hnn_{k.lower()}_share", us,
+                 f"{v / tot:.3f}")
+
+
+def fig13_energy_sweeps(emit):
+    for m in MODELS:
+        for bits in (8, 16, 32):
+            (r, us) = _timed(lambda: (_sim(m, "ann", bits=bits),
+                                      _sim(m, "hnn", bits=bits)))
+            emit(f"fig13_bits/{m}/b{bits}", us,
+                 f"{r[0].total_energy / r[1].total_energy:.3f}x")
+        for g in (64, 128, 256):
+            (r, us) = _timed(lambda: (_sim(m, "ann", neurons_per_core=g),
+                                      _sim(m, "hnn", neurons_per_core=g)))
+            emit(f"fig13_group/{m}/g{g}", us,
+                 f"{r[0].total_energy / r[1].total_energy:.3f}x")
+
+
+def fig7_sparsity(emit):
+    for m in MODELS:
+        base = _sim(m, "ann")
+        for sp in (0.80, 0.90, 0.95, 0.975):
+            (h, us) = _timed(lambda: _sim(m, "hnn", spike_sparsity=sp))
+            emit(f"fig7_sparsity/{m}/s{int(sp * 1000)}", us,
+                 f"{base.latency_s / h.latency_s:.3f}x")
+
+
+ALL = (fig10_latency, fig11_sweeps, fig12_energy, fig13_energy_sweeps,
+       fig7_sparsity)

@@ -1,0 +1,95 @@
+"""Roofline report: merge dry-run artifacts with the analytic cost model.
+
+Produces the EXPERIMENTS.md §Roofline table: per (arch x shape), the
+three terms (compute/memory/collective), the dominant bottleneck, the
+MODEL_FLOPS/HLO ratio, and the HLO-parse cross-check.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch import analytic as AN
+from repro.launch import roofline as RL
+
+
+def load(path="results/dryrun.jsonl"):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["multi_pod"],
+                  r.get("codec"))] = r
+    return recs
+
+
+def row(arch, shape, rec, multi_pod=False, codec=None):
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    chips = 512 if multi_pod else 256
+    mode = cell.kind
+    c = AN.analytic_cost(cfg, cell, chips, 16, mode, codec=codec)
+    t = AN.terms(c)
+    mf = RL.model_flops_per_chip(cfg, cell, chips, mode)
+    dom = max(t, key=t.get)
+    out = {
+        "arch": arch, "shape": shape, "chips": chips,
+        "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+        "collective_s": t["collective_s"],
+        "bottleneck": dom.replace("_s", ""),
+        "model_flops": mf,
+        "useful_ratio": mf / c.flops if c.flops else 0.0,
+        "roofline_frac": t["compute_s"] / max(t.values()),
+    }
+    if rec and rec.get("status") == "ok":
+        out["hlo_flops_per_unit"] = rec["roofline"]["flops"]
+        out["hlo_wire_per_unit"] = rec["roofline"]["wire_bytes"]
+        out["mem_temp_gb"] = rec["memory"]["temp_size_in_bytes"] / 1e9
+        out["mem_args_gb"] = rec["memory"]["argument_size_in_bytes"] / 1e9
+    return out
+
+
+def table(multi_pod=False, emit=print):
+    recs = load()
+    emit(f"| arch | shape | compute s | memory s | collective s | "
+         f"bottleneck | useful ratio | roofline frac |")
+    emit("|---|---|---|---|---|---|---|---|")
+    rows = []
+    for arch in sorted({k[0] for k in recs} or
+                       [a for a in __import__("repro.configs",
+                                              fromlist=["ASSIGNED"]).ASSIGNED]):
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            key = [k for k in recs if k[0] == arch and k[1] == shape
+                   and k[2] == multi_pod]
+            rec = recs[key[0]] if key else None
+            if rec and rec["status"] == "skipped":
+                emit(f"| {arch} | {shape} | — | — | — | skipped "
+                     f"(sub-quadratic gate) | — | — |")
+                continue
+            r = row(arch, shape, rec, multi_pod)
+            rows.append(r)
+            emit(f"| {arch} | {shape} | {r['compute_s']:.2e} | "
+                 f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+                 f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+                 f"{r['roofline_frac']:.2f} |")
+    return rows
+
+
+def worst_cells(rows, n=3):
+    by_frac = sorted(rows, key=lambda r: r["roofline_frac"])
+    by_coll = sorted(rows, key=lambda r: -(r["collective_s"] /
+                                           max(r["compute_s"], 1e-12)))
+    return by_frac[:n], by_coll[:n]
+
+
+if __name__ == "__main__":
+    rows = table()
+    wf, wc = worst_cells(rows)
+    print("\nworst roofline fraction:",
+          [(r["arch"], r["shape"], round(r["roofline_frac"], 3))
+           for r in wf])
+    print("most collective-bound:",
+          [(r["arch"], r["shape"]) for r in wc])

@@ -1,0 +1,99 @@
+"""Benchmark harness: one function per paper table/figure + system
+microbenchmarks + roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+ROWS = []
+
+
+def emit(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_kernels(emit):
+    """Spike codec microbenchmarks (jnp closed-form path, CPU timings)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import spike
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096, 1024))
+    params = spike.init_spike_params(1024)
+    cfg = spike.SpikeConfig(T=15)
+
+    enc = jax.jit(lambda a: spike.encode(a, params, cfg).astype(jnp.int8))
+    w = enc(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        w = enc(x).block_until_ready()
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    gbps = x.size * 4 / (us * 1e-6) / 1e9
+    emit("kernel/spike_encode_4Mx", us, f"{gbps:.2f}GB/s")
+
+    dec = jax.jit(lambda c: spike.decode(c.astype(jnp.float32), params,
+                                         cfg, jnp.bfloat16))
+    y = dec(w).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        y = dec(w).block_until_ready()
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    emit("kernel/spike_decode_4Mx", us,
+         f"{x.size * 1 / (us * 1e-6) / 1e9:.2f}GB/s")
+
+    u8 = (w.astype(jnp.int32) + 7).astype(jnp.uint8) & 0xF
+    pk = jax.jit(spike.pack4)
+    p = pk(u8).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        p = pk(u8).block_until_ready()
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    emit("kernel/pack4_4Mx", us, f"2x_wire_reduction")
+
+
+def bench_boundary_bytes(emit):
+    """Wire-byte accounting per codec for a canonical boundary tensor."""
+    from repro.launch.analytic import wire_bytes_per_elem
+    B, S, D = 16, 4096, 8192
+    base = B * S * D * 2
+    for codec in ("none", "int8", "spike_fused", "spike_pack4",
+                  "sparse_topk"):
+        w = wire_bytes_per_elem(codec)
+        emit(f"boundary/{codec}", 0.0,
+             f"{base / (B * S * D * w):.2f}x_fewer_bytes")
+
+
+def bench_roofline(emit):
+    """§Roofline summary from the dry-run sweep (single-pod)."""
+    from benchmarks.roofline_report import load, row
+    recs = load()
+    if not recs:
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for (arch, shape, mp, codec), rec in sorted(recs.items()):
+        if mp or rec.get("status") != "ok":
+            continue
+        t0 = time.perf_counter()
+        r = row(arch, shape, rec, mp)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"roofline/{arch}/{shape}", us,
+             f"bottleneck={r['bottleneck']};frac={r['roofline_frac']:.3f}")
+
+
+def main() -> None:
+    from benchmarks import paper_tables
+    print("name,us_per_call,derived")
+    for fn in paper_tables.ALL:
+        fn(emit)
+    bench_kernels(emit)
+    bench_boundary_bytes(emit)
+    bench_roofline(emit)
+    print(f"# {len(ROWS)} benchmark rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: build an HNN, run a train step and a decode step, and show
+what the spike boundary puts on the wire.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeCell, smoke_shape
+from repro.configs.reduced import reduced
+from repro.core import boundary, spike
+from repro.launch import serve as SV
+from repro.launch import specs as SP
+from repro.launch import train as TR
+from repro.launch.mesh import make_mesh
+
+
+def main():
+    # 1. the paper's core op: learnable spike encode -> int8 wire -> decode
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 0.5
+    params = spike.init_spike_params(16)
+    cfg_s = spike.SpikeConfig(T=15)
+    counts = spike.encode(x, params, cfg_s)
+    y = spike.decode(counts, params, cfg_s, jnp.float32)
+    print("activation  :", np.array(x[0, :6]).round(3))
+    print("spike counts:", np.array(counts[0, :6], np.int8))
+    print("decoded     :", np.array(y[0, :6]).round(3))
+    print(f"wire: {counts.size} int8 counts = "
+          f"{counts.size} B vs {x.size * 2} B bf16 (2x; pack4 -> 4x)\n")
+
+    # 2. an HNN model: train step + greedy decode on a tiny mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(get_config("gemma2-2b"))           # local/global + softcap
+    cell = smoke_shape("train")
+    plan = SP.make_plan(cfg, cell, mesh)
+    step, *_ = TR.make_train_step(cfg, plan, mesh, with_optimizer=False)
+    model_params = TR.init_sharded_params(cfg, plan, mesh,
+                                          jax.random.PRNGKey(0))
+    B, S = cell.global_batch, cell.seq_len
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab,
+                             jnp.int32)
+    loss, grads, m = step(model_params, {"tokens": tok,
+                                         "labels": jnp.roll(tok, -1, 1)})
+    print(f"gemma2 (reduced, HNN) train loss: {float(m['loss']):.3f}  "
+          f"boundary occupancy: {float(m['occupancy']):.3f}")
+
+    dcell = ShapeCell("d", S, B, "decode")
+    dplan = SP.make_plan(cfg, dcell, mesh)
+    pre, *_ = SV.make_prefill_step(cfg, dplan, mesh)
+    dec, _, _ = SV.make_decode_step(cfg, dplan, mesh)
+    logits, cache = pre(model_params, {"tokens": tok, "labels": tok})
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    for t in range(4):
+        logits, cache = dec(model_params, cache, nxt,
+                            jnp.asarray(S - 1 + t, jnp.int32))
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    print("greedy decode tokens:", np.array(nxt))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Fig 7 analogue: sweep the sparsity regularizer and plot the tradeoff.
+
+For each target rate, trains a small HNN and reports (loss, achieved
+occupancy); the NoC simulator then converts occupancy to latency, giving
+the paper's latency-vs-sparsity curve with the accuracy phase transition.
+
+    PYTHONPATH=src python examples/sparsity_sweep.py --steps 120
+"""
+import argparse
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.configs.reduced import reduced
+from repro.core.spike import SpikeConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch import specs as SP
+from repro.launch import train as TR
+from repro.launch.mesh import make_mesh
+from repro.optim import adamw
+from repro.sim.noc import NocConfig, NocSim, PAPER_MODELS
+
+
+def train_at(target_rate, lam, steps, seq=128, batch=8):
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(get_config("rwkv-paper"))
+    cell = ShapeCell("sweep", seq, batch, "train")
+    plan = SP.make_plan(cfg, cell, mesh)
+    step, *_ = TR.make_train_step(cfg, plan, mesh, with_optimizer=True)
+    # patch the codec's sparsity target via context: codec config lives in
+    # the SpikeConfig; easiest is a config-level override
+    import repro.launch.specs as SPM
+    orig = SPM.codec_from_name
+
+    def patched(name, mode):
+        c = orig(name, mode)
+        return dataclasses.replace(
+            c, cfg=dataclasses.replace(c.cfg, target_rate=target_rate,
+                                       lam=lam))
+    SPM.codec_from_name = patched
+    try:
+        from repro.optim.adamw import AdamWConfig
+        step, *_ = TR.make_train_step(
+            cfg, plan, mesh, with_optimizer=True,
+            opt_cfg=AdamWConfig(lr=2e-3, warmup_steps=20,
+                                total_steps=steps))
+        params = TR.init_sharded_params(cfg, plan, mesh,
+                                        jax.random.PRNGKey(0))
+        opt = adamw.init_opt_state(params)
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                      global_batch=batch))
+        m = {}
+        for s in range(steps):
+            params, opt, m = step(params, opt, data.batch(s))
+        return float(m["loss"]), float(m["occupancy"])
+    finally:
+        SPM.codec_from_name = orig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+    print(f"{'target':>7s} {'loss':>8s} {'occup.':>7s} "
+          f"{'sim latency gain':>16s}")
+    base = NocSim(NocConfig(mode="ann")).simulate(PAPER_MODELS["rwkv"]())
+    for target in (0.5, 0.25, 0.10, 0.05, 0.02):
+        loss, occ = train_at(target, lam=1.0, steps=args.steps)
+        sim = NocSim(NocConfig(mode="hnn", spike_sparsity=1 - occ)) \
+            .simulate(PAPER_MODELS["rwkv"]())
+        print(f"{target:7.2f} {loss:8.4f} {occ:7.3f} "
+              f"{base.latency_s / sim.latency_s:15.2f}x")
+
+
+if __name__ == "__main__":
+    main()

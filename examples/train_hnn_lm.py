@@ -1,0 +1,16 @@
+"""End-to-end driver: fault-tolerant HNN language-model training.
+
+Default trains the paper's RWKV LM; pass --arch/--steps/--mesh to scale
+(e.g. --arch qwen1.5-0.5b for a ~100M-class model on real hardware).
+
+    PYTHONPATH=src python examples/train_hnn_lm.py --steps 300
+"""
+import sys
+
+from repro.launch.train_cli import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0]] + (sys.argv[1:] or
+                                ["--arch", "rwkv-paper", "--steps", "300",
+                                 "--batch", "8", "--seq", "128"])
+    main()

@@ -1,0 +1,38 @@
+"""Architecture registry: ``get_config(name)`` / ``reduced(cfg)``."""
+from __future__ import annotations
+
+from .base import ModelConfig, ShapeCell, SHAPES, smoke_shape  # noqa: F401
+
+_REGISTRY = {}
+
+
+def register(fn):
+    cfg = fn()
+    _REGISTRY[cfg.name] = fn
+    return fn
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    from . import (gemma2_2b, granite_20b, jamba_1_5_large,  # noqa: F401
+                   llama4_maverick, qwen1_5_0_5b, qwen1_5_4b,
+                   qwen2_moe_a2_7b, qwen2_vl_2b, rwkv_paper,
+                   seamless_m4t_medium, xlstm_125m)
+    cfg = _REGISTRY[name]()
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def list_archs():
+    from . import (gemma2_2b, granite_20b, jamba_1_5_large,  # noqa: F401
+                   llama4_maverick, qwen1_5_0_5b, qwen1_5_4b,
+                   qwen2_moe_a2_7b, qwen2_vl_2b, rwkv_paper,
+                   seamless_m4t_medium, xlstm_125m)
+    return sorted(_REGISTRY.keys())
+
+
+ASSIGNED = (
+    "jamba-1.5-large-398b", "qwen2-vl-2b", "gemma2-2b", "qwen1.5-0.5b",
+    "qwen1.5-4b", "granite-20b", "llama4-maverick-400b-a17b",
+    "qwen2-moe-a2.7b", "xlstm-125m", "seamless-m4t-medium",
+)

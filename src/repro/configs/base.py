@@ -1,0 +1,157 @@
+"""Model configuration schema shared by every architecture.
+
+A config fully determines parameter shapes, the layer pattern, and which
+boundary collectives exist (and therefore where the paper's spike codec
+applies).  ``pattern`` is the repeating unit of block kinds; the stack is
+``n_layers / len(pattern)`` scanned units (MaxText-style scanned layers
+keep the HLO small at 72-layer scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Tuple
+
+import jax.numpy as jnp
+
+BLOCK_KINDS = (
+    "attn",        # dense attention + dense MLP
+    "attn_moe",    # attention + MoE FFN
+    "local",       # sliding-window attention + dense MLP
+    "global",      # full attention + dense MLP (alias of attn for patterns)
+    "mamba",       # mamba mixer only
+    "mamba_mlp",   # mamba mixer + dense MLP
+    "mamba_moe",   # mamba mixer + MoE FFN
+    "mlstm",       # xLSTM mLSTM block (self-contained)
+    "slstm",       # xLSTM sLSTM block (self-contained)
+    "rwkv",        # RWKV time-mix + channel-mix
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense|moe|hybrid|ssm|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    pattern: Tuple[str, ...] = ("attn",)
+
+    # attention
+    qkv_bias: bool = False
+    rope_kind: str = "rope"          # rope|mrope|none
+    rope_theta: float = 1e4
+    window: int = 4096               # sliding window for 'local' blocks
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    norm: str = "rmsnorm"            # rmsnorm|layernorm
+    post_norm: bool = False          # gemma2 sandwich norms
+    act: str = "silu"                # silu|gelu
+
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+
+    # mamba
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                 # 0 -> ceil(d_model/16)
+
+    # encoder-decoder
+    is_encdec: bool = False
+    n_enc_layers: int = 0
+
+    # modality frontend stub
+    frontend: str = "none"           # none|patches|frames
+
+    # hnn / boundary
+    hnn_mode: str = "hnn"            # ann|hnn|snn
+    codec: str = "spike_fused"       # none|int8|spike|spike_fused|spike_pack4|sparse_topk
+
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    # whether this arch supports 524k decode (sub-quadratic path)
+    subquadratic: bool = False
+
+    # ---------------- derived helpers ----------------
+
+    @property
+    def n_units(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, (
+            self.name, self.n_layers, self.pattern)
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank_eff(self) -> int:
+        return self.dt_rank or max(1, math.ceil(self.d_model / 16))
+
+    def padded(self, n: int, mult: int) -> int:
+        return ((n + mult - 1) // mult) * mult
+
+    def heads_padded(self, tp: int) -> int:
+        return self.padded(self.n_heads, tp)
+
+    def kv_heads_eff(self, tp: int) -> tuple[int, bool]:
+        """(#kv heads stored per shard basis, replicated?) — if n_kv_heads
+        is divisible by tp we shard them, else replicate across tp."""
+        if self.n_kv_heads % tp == 0:
+            return self.n_kv_heads, False
+        return self.n_kv_heads, True
+
+    def ff_padded(self, tp: int) -> int:
+        return self.padded(self.d_ff, tp) if self.d_ff else 0
+
+    def ffe_padded(self, tp: int) -> int:
+        return self.padded(self.d_ff_expert, tp) if self.d_ff_expert else 0
+
+    def vocab_padded(self, tp: int) -> int:
+        return self.padded(self.vocab, tp)
+
+    def inner_padded(self, tp: int) -> int:
+        return self.padded(self.d_inner, tp)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell."""
+
+    name: str                        # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def smoke_shape(kind: str = "train") -> ShapeCell:
+    """Tiny shape for CPU smoke tests."""
+    if kind == "train":
+        return ShapeCell("smoke_train", 32, 2, "train")
+    if kind == "prefill":
+        return ShapeCell("smoke_prefill", 32, 2, "prefill")
+    return ShapeCell("smoke_decode", 32, 2, "decode")

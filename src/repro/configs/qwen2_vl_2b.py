@@ -1,0 +1,28 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.  The vision
+frontend is a stub per the assignment: input_specs() provides M-RoPE
+position ids (3, B, S); patch embeddings enter as ordinary tokens.
+"""
+from . import register
+from .base import ModelConfig
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b",
+        family="vlm",
+        n_layers=28,
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=2,
+        d_head=128,
+        d_ff=8960,
+        vocab=151936,
+        pattern=("attn",),
+        qkv_bias=True,
+        rope_kind="mrope",
+        rope_theta=1e6,
+        frontend="patches",
+    )

@@ -1,0 +1,29 @@
+"""seamless-m4t-medium [audio] — enc-dec, multimodal [arXiv:2308.11596; hf].
+
+12L (decoder) + 12L encoder, d_model=1024 16H (MHA) d_ff=4096
+vocab=256206.  The audio frontend is a stub per the assignment:
+input_specs() provides precomputed frame embeddings [B, S_enc, D].
+"""
+from . import register
+from .base import ModelConfig
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium",
+        family="audio",
+        n_layers=12,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_head=64,
+        d_ff=4096,
+        vocab=256206,
+        pattern=("attn",),
+        is_encdec=True,
+        n_enc_layers=12,
+        frontend="frames",
+        norm="layernorm",
+        act="gelu",
+    )

@@ -1,0 +1,422 @@
+"""Spike-coded boundary collectives — the paper's die-to-die interface on TPU.
+
+Every tensor that crosses a chip boundary on TPU moves through a
+collective.  ``BoundaryCodec`` wraps the four collectives the framework
+uses (all_gather / psum_scatter / ppermute / all_to_all) so that the bytes
+on the ICI wire are spike counts (int8, or packed uint4) instead of
+bf16/f32 activations.  Modes:
+
+  none        : plain bf16 collective (the ANN baseline).
+  int8        : per-channel absmax int8 quantization (ablation baseline).
+  spike       : paper-faithful — T-tick LIF (lax.scan) per boundary, int8
+                signed counts on the wire. 2x fewer bytes than bf16.
+  spike_fused : closed-form count encoder (bit-identical wire for the
+                deterministic rate code), no T-tick scan. 2x bytes.
+  spike_pack4 : fused encoder with T<=7, two counts per byte. 4x bytes.
+  sparse_topk : event-driven packets — fixed-capacity (index,count) pairs
+                for the top-c fraction of active channels (beyond-paper;
+                DESIGN.md §2). ~(3..5)/ (2*c) x reduction.
+
+Gradients: the wire is integer, so each boundary is a ``jax.custom_vjp``
+whose forward runs the integer collective and whose backward runs the
+transpose collective on the (optionally compressed) cotangent, chained
+through the local encode/decode VJP (surrogate LIF gradients + straight-
+through rounding from ``repro.core.spike``).
+
+All functions must be called inside ``shard_map`` with the named axes
+bound.  The channel axis is the last axis; ``axis`` selects the token
+axis being gathered/scattered.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import spike
+from .spike import SpikeConfig
+
+Axis = Any  # str | tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundaryCodec:
+    """Static description of one class of boundary."""
+
+    mode: str = "none"
+    cfg: SpikeConfig = SpikeConfig()
+    capacity: float = 0.125        # sparse_topk capacity fraction
+    bwd_mode: str = "none"         # compress backward wire too ("int8"|"none")
+
+    def wire_bits(self) -> float:
+        """Bits per boundary element on the wire (for roofline bookkeeping)."""
+        if self.mode == "none":
+            return 16.0
+        if self.mode in ("int8", "spike", "spike_fused"):
+            return 8.0
+        if self.mode == "spike_pack4":
+            return 4.0
+        if self.mode == "sparse_topk":
+            return self.capacity * (8 + 32)
+        raise ValueError(self.mode)
+
+
+ANN = BoundaryCodec(mode="none")
+HNN_FAITHFUL = BoundaryCodec(mode="spike", cfg=SpikeConfig(T=15, faithful=True))
+HNN_FUSED = BoundaryCodec(mode="spike_fused", cfg=SpikeConfig(T=15))
+HNN_PACK4 = BoundaryCodec(mode="spike_pack4", cfg=SpikeConfig(T=7))
+
+
+def _axis_size(axis_name: Axis) -> int:
+    if isinstance(axis_name, (tuple, list)):
+        n = 1
+        for a in axis_name:
+            n *= lax.axis_size(a)
+        return n
+    return lax.axis_size(axis_name)
+
+
+# ---------------------------------------------------------------------------
+# local encode/decode to the integer wire format
+# ---------------------------------------------------------------------------
+
+
+def _encode_local(x, params, codec: BoundaryCodec):
+    """x float [..., C] -> (wire int tensor, decode closure, counts float)."""
+    cfg = codec.cfg
+    if codec.mode == "int8":
+        amax = jnp.max(jnp.abs(x), axis=tuple(range(x.ndim - 1)), keepdims=True)
+        s = jnp.maximum(amax, 1e-6) / 127.0
+        wire = jnp.round(x / s).astype(jnp.int8)
+        return wire, s, None
+    counts = spike.encode(x, params, cfg)           # float in {-T..T}
+    if codec.mode == "spike_pack4":
+        wire = (counts + cfg.T).astype(jnp.uint8)   # {0..14} fits 4 bits
+        shp = wire.shape
+        wire = spike.pack4(wire.reshape(-1, shp[-1])).reshape(
+            *shp[:-1], shp[-1] // 2)
+        return wire, None, counts
+    wire = counts.astype(jnp.int8)
+    return wire, None, counts
+
+
+def _decode_local(wire, params, codec: BoundaryCodec, scale_i8, dtype):
+    # decode directly in the compute dtype: counts are small integers,
+    # exactly representable in bf16, and the f32 intermediate would be the
+    # largest transient buffer at the boundary
+    cfg = codec.cfg
+    if codec.mode == "int8":
+        return (wire.astype(jnp.float32) * scale_i8).astype(dtype)
+    if codec.mode == "spike_pack4":
+        shp = wire.shape
+        u = spike.unpack4(wire.reshape(-1, shp[-1])).reshape(
+            *shp[:-1], shp[-1] * 2)
+        counts = u.astype(dtype) - jnp.asarray(cfg.T, dtype)
+    else:
+        counts = wire.astype(dtype)
+    return spike.decode(counts, params, cfg, dtype)
+
+
+def _local_roundtrip(x, params, codec: BoundaryCodec):
+    """Differentiable local view of encode->wire->decode (for the VJP)."""
+    if codec.mode == "int8":
+        amax = jnp.max(jnp.abs(x), axis=tuple(range(x.ndim - 1)), keepdims=True)
+        s = jnp.maximum(amax, 1e-6) / 127.0
+        return spike.round_ste(x / s) * s
+    counts = spike.encode(x, params, codec.cfg)
+    return spike.decode(counts, params, codec.cfg, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sparsity statistics (feeds the eq-10 regularizer)
+# ---------------------------------------------------------------------------
+
+
+def boundary_penalty(x, params, codec: BoundaryCodec):
+    """Differentiable sparsity penalty + firing-rate stat for one boundary."""
+    if codec.mode in ("none", "int8"):
+        return jnp.zeros((), x.dtype), jnp.zeros((), x.dtype)
+    counts = spike.encode(x, params, codec.cfg)
+    pen = spike.sparsity_loss(counts, codec.cfg.T, codec.cfg.target_rate,
+                              codec.cfg.lam)
+    occ = spike.occupancy(counts)
+    return pen.astype(x.dtype), occ.astype(x.dtype)
+
+
+
+def _roundtrip_bwd(x, theta, log_scale, g, codec: BoundaryCodec):
+    """Analytic VJP of the local encode->decode roundtrip (no saved
+    linearization residuals; see spike.roundtrip_vjp)."""
+    if codec.mode == "int8":
+        # straight-through within the absmax clip; no learnable params
+        return (g.astype(x.dtype), jnp.zeros_like(theta),
+                jnp.zeros_like(log_scale))
+    return spike.roundtrip_vjp(x, theta, log_scale, g, codec.cfg)
+
+
+# ---------------------------------------------------------------------------
+# coded all_gather (tiled, along token axis)
+# ---------------------------------------------------------------------------
+
+
+def coded_all_gather(x, params, codec: BoundaryCodec, axis_name: Axis,
+                     axis: int = 0):
+    """Gather token-sharded activations across ``axis_name``; spike wire."""
+    if codec.mode == "none":
+        return lax.all_gather(x, axis_name, axis=axis, tiled=True)
+
+    if codec.mode == "sparse_topk":
+        return _topk_all_gather(x, params, codec, axis_name, axis)
+
+    @jax.custom_vjp
+    def _ag(x, theta, log_scale):
+        p = {"theta": theta, "log_scale": log_scale}
+        wire, s8, _ = _encode_local(x, p, codec)
+        wire_g = lax.all_gather(wire, axis_name, axis=axis, tiled=True)
+        if s8 is not None:
+            # per-source-chip scales: decode segment-wise
+            n = _axis_size(axis_name)
+            s8_g = lax.all_gather(s8, axis_name, axis=0, tiled=False)  # [n,1..,C]
+            seg = jnp.moveaxis(
+                wire_g.reshape(wire_g.shape[:axis]
+                               + (n, wire_g.shape[axis] // n)
+                               + wire_g.shape[axis + 1:]), axis, 0)
+            dec = seg.astype(jnp.float32) * s8_g.reshape(
+                (n,) + (1,) * (seg.ndim - 2) + (s8.shape[-1],))
+            dec = jnp.moveaxis(dec, 0, axis)
+            return dec.reshape(wire_g.shape).astype(x.dtype)
+        return _decode_local(wire_g, p, codec, None, x.dtype)
+
+    def _fwd(x, theta, log_scale):
+        # save primals only; the local-roundtrip VJP is recomputed in _bwd
+        # (linearization residuals at [B,S,D] width dominate backward HBM)
+        return _ag(x, theta, log_scale), (x, theta, log_scale)
+
+    def _bwd(res, g):
+        x, theta, log_scale = res
+        if codec.bwd_mode == "int8":
+            dummy = {"theta": theta, "log_scale": log_scale}
+            g_loc = coded_psum_scatter(g, dummy,
+                                       BoundaryCodec(mode="int8"),
+                                       axis_name, axis=axis)
+        else:
+            g_loc = lax.psum_scatter(g, axis_name, scatter_dimension=axis,
+                                     tiled=True)
+        return _roundtrip_bwd(x, theta, log_scale, g_loc, codec)
+
+    _ag.defvjp(_fwd, _bwd)
+    return _ag(x, params["theta"], params["log_scale"])
+
+
+# ---------------------------------------------------------------------------
+# coded psum_scatter: sum of per-chip spike counts = CLP accumulate (§3.5)
+# ---------------------------------------------------------------------------
+
+
+def coded_psum_scatter(x, params, codec: BoundaryCodec, axis_name: Axis,
+                       axis: int = 0):
+    """Reduce-scatter partial sums across ``axis_name``.
+
+    Coded modes move int8 counts with an all_to_all and accumulate the
+    decoded counts locally (the paper's spike-accumulation, eq 3) —
+    identical wire bytes to a reduce-scatter, no int8-overflow hazard.
+    """
+    if codec.mode == "none":
+        return lax.psum_scatter(x, axis_name, scatter_dimension=axis,
+                                tiled=True)
+
+    n = _axis_size(axis_name)
+
+    @jax.custom_vjp
+    def _ps(x, theta, log_scale):
+        p = {"theta": theta, "log_scale": log_scale}
+        wire, s8, _ = _encode_local(x, p, codec)
+        # split the token axis into n chunks, exchange, sum decoded chunks
+        w = _split_axis(wire, n, axis)           # [n, ..., tok/n, ..., C]
+        w = _a2a(w, axis_name)                   # recv one chunk per peer
+        if s8 is not None:
+            s8 = lax.all_gather(s8, axis_name, axis=0)   # [n, 1.., C]
+            dec = _decode_local(w, p, codec, s8, x.dtype)
+        else:
+            dec = _decode_local(w, p, codec, None, x.dtype)
+        return jnp.sum(dec, axis=0)
+
+    def _fwd(x, theta, log_scale):
+        return _ps(x, theta, log_scale), (x, theta, log_scale)
+
+    def _bwd(res, g):
+        x, theta, log_scale = res
+        if codec.bwd_mode == "int8":
+            dummy = {"theta": theta, "log_scale": log_scale}
+            gg = coded_all_gather(g, dummy, BoundaryCodec(mode="int8"),
+                                  axis_name, axis=axis)
+        else:
+            gg = lax.all_gather(g, axis_name, axis=axis, tiled=True)
+        return _roundtrip_bwd(x, theta, log_scale, gg, codec)
+
+    _ps.defvjp(_fwd, _bwd)
+    return _ps(x, params["theta"], params["log_scale"])
+
+
+def _split_axis(x, n, axis):
+    """[..., tok, ...] -> [n, ..., tok/n, ...] splitting ``axis``."""
+    shp = list(x.shape)
+    assert shp[axis] % n == 0, (shp, n, axis)
+    new = shp[:axis] + [n, shp[axis] // n] + shp[axis + 1:]
+    x = x.reshape(new)
+    return jnp.moveaxis(x, axis, 0)
+
+
+def _a2a(x, axis_name):
+    """all_to_all over leading split dim (handles tuple axis names)."""
+    if isinstance(axis_name, (tuple, list)) and len(axis_name) > 1:
+        # decompose: successive all_to_alls over each axis
+        sizes = [lax.axis_size(a) for a in axis_name]
+        n = x.shape[0]
+        out = x
+        # reshape leading dim [n] -> sizes, a2a each axis in turn
+        out = out.reshape(tuple(sizes) + x.shape[1:])
+        for i, a in enumerate(axis_name):
+            out = lax.all_to_all(out, a, split_axis=i, concat_axis=i,
+                                 tiled=False)
+        return out.reshape((n,) + x.shape[1:])
+    return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+                          tiled=False)
+
+
+# ---------------------------------------------------------------------------
+# coded ppermute (pipeline-stage / pod-boundary sends)
+# ---------------------------------------------------------------------------
+
+
+def coded_ppermute(x, params, codec: BoundaryCodec, axis_name: str,
+                   perm: Sequence[tuple[int, int]]):
+    if codec.mode == "none":
+        return lax.ppermute(x, axis_name, perm)
+
+    inv_perm = [(d, s) for (s, d) in perm]
+
+    @jax.custom_vjp
+    def _pp(x, theta, log_scale):
+        p = {"theta": theta, "log_scale": log_scale}
+        wire, s8, _ = _encode_local(x, p, codec)
+        wire = lax.ppermute(wire, axis_name, perm)
+        if s8 is not None:
+            s8 = lax.ppermute(s8, axis_name, perm)
+        return _decode_local(wire, p, codec, s8, x.dtype)
+
+    def _fwd(x, theta, log_scale):
+        return _pp(x, theta, log_scale), (x, theta, log_scale)
+
+    def _bwd(res, g):
+        x, theta, log_scale = res
+        gb = lax.ppermute(g, axis_name, inv_perm)
+        return _roundtrip_bwd(x, theta, log_scale, gb, codec)
+
+    _pp.defvjp(_fwd, _bwd)
+    return _pp(x, params["theta"], params["log_scale"])
+
+
+# ---------------------------------------------------------------------------
+# coded all_to_all (MoE dispatch/combine)
+# ---------------------------------------------------------------------------
+
+
+def coded_all_to_all(x, params, codec: BoundaryCodec, axis_name: str,
+                     split_axis: int, concat_axis: int):
+    if codec.mode == "none":
+        return lax.all_to_all(x, axis_name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+    @jax.custom_vjp
+    def _aa(x, theta, log_scale):
+        p = {"theta": theta, "log_scale": log_scale}
+        wire, s8, _ = _encode_local(x, p, codec)
+        wire = lax.all_to_all(wire, axis_name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+        if s8 is not None:
+            # segment-wise decode: chunks along concat_axis are per-source
+            n = _axis_size(axis_name)
+            s8_g = lax.all_gather(s8, axis_name, axis=0, tiled=False)
+            seg = jnp.moveaxis(
+                wire.reshape(wire.shape[:concat_axis]
+                             + (n, wire.shape[concat_axis] // n)
+                             + wire.shape[concat_axis + 1:]), concat_axis, 0)
+            dec = seg.astype(jnp.float32) * s8_g.reshape(
+                (n,) + (1,) * (seg.ndim - 2) + (s8.shape[-1],))
+            dec = jnp.moveaxis(dec, 0, concat_axis)
+            return dec.reshape(wire.shape).astype(x.dtype)
+        return _decode_local(wire, p, codec, None, x.dtype)
+
+    def _fwd(x, theta, log_scale):
+        return _aa(x, theta, log_scale), (x, theta, log_scale)
+
+    def _bwd(res, g):
+        x, theta, log_scale = res
+        gb = lax.all_to_all(g, axis_name, split_axis=concat_axis,
+                            concat_axis=split_axis, tiled=True)
+        return _roundtrip_bwd(x, theta, log_scale, gb, codec)
+
+    _aa.defvjp(_fwd, _bwd)
+    return _aa(x, params["theta"], params["log_scale"])
+
+
+# ---------------------------------------------------------------------------
+# sparse_topk: event-driven fixed-capacity packets (beyond-paper)
+# ---------------------------------------------------------------------------
+
+
+def _topk_all_gather(x, params, codec: BoundaryCodec, axis_name: Axis,
+                     axis: int):
+    """Send only the top-c fraction of |count| per token: (idx, count)."""
+    cfg = codec.cfg
+    C = x.shape[-1]
+    k = max(8, int(C * codec.capacity))
+    k = min(k, C)
+
+    @jax.custom_vjp
+    def _tk(x, theta, log_scale):
+        p = {"theta": theta, "log_scale": log_scale}
+        counts = spike.encode(x, p, cfg)
+        mag = jnp.abs(counts)
+        _, idx = lax.top_k(mag, k)                       # [..., k] int32
+        vals = jnp.take_along_axis(counts, idx, axis=-1).astype(jnp.int8)
+        idx_g = lax.all_gather(idx.astype(jnp.int32), axis_name,
+                               axis=axis, tiled=True)
+        val_g = lax.all_gather(vals, axis_name, axis=axis, tiled=True)
+        out = jnp.zeros(val_g.shape[:-1] + (C,), jnp.float32)
+        out = _scatter_last(out, idx_g, val_g.astype(jnp.float32))
+        return spike.decode(out, p, cfg, x.dtype)
+
+    def _local(a, t, l):
+        p = {"theta": t, "log_scale": l}
+        c = spike.encode(a, p, cfg)
+        mag = jax.lax.stop_gradient(jnp.abs(c))
+        thresh = jnp.sort(mag, axis=-1)[..., C - k][..., None]
+        mask = (mag >= thresh).astype(c.dtype)
+        return spike.decode(c * mask, p, cfg, a.dtype)
+
+    def _fwd(x, theta, log_scale):
+        return _tk(x, theta, log_scale), (x, theta, log_scale)
+
+    def _bwd(res, g):
+        x, theta, log_scale = res
+        g_loc = lax.psum_scatter(g, axis_name, scatter_dimension=axis,
+                                 tiled=True)
+        _, vjp = jax.vjp(_local, x, theta, log_scale)
+        return vjp(g_loc)
+
+    _tk.defvjp(_fwd, _bwd)
+    return _tk(x, params["theta"], params["log_scale"])
+
+
+def _scatter_last(dense, idx, vals):
+    """dense[..., idx[..., j]] = vals[..., j] along last axis."""
+    return jax.vmap(lambda d, i, v: d.at[i].set(v))(
+        dense.reshape(-1, dense.shape[-1]),
+        idx.reshape(-1, idx.shape[-1]),
+        vals.reshape(-1, vals.shape[-1]),
+    ).reshape(dense.shape)

@@ -1,0 +1,345 @@
+"""Spike-based encoding core (paper §3.5, eqs 1-3, 10).
+
+Implements the learnable spike sparsification used at die-to-die
+(→ TPU: inter-chip collective) boundaries:
+
+* LIF neuron dynamics (eq 1) with surrogate gradients,
+* deterministic rate coding: activation -> T-tick spike train (eq 2,
+  corrected; see DESIGN.md §2) and its inverse decode (eq 3),
+* a closed-form "fused" count encoder that is bit-identical to summing
+  the deterministic spike train but avoids materializing T ticks,
+* the hinge sparsity regularizer (eq 10),
+* 4-bit two-per-byte packing for the wire format.
+
+Everything is pure jnp and jax.grad-compatible; Pallas kernels in
+``repro.kernels`` provide the TPU hot-path versions and are validated
+against these references.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Surrogate gradients
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def spike_step(v: jax.Array, beta: float = 10.0) -> jax.Array:
+    """Heaviside H(v) with fast-sigmoid surrogate gradient.
+
+    Forward: 1.0 where v >= 0.  Backward: d/dv sigma_fast(beta*v)
+    = beta / (1 + beta*|v|)^2 (Eshraghian et al., "Training SNNs using
+    lessons from deep learning").
+    """
+    return (v >= 0.0).astype(v.dtype)
+
+
+def _spike_step_fwd(v, beta):
+    return spike_step(v, beta), (v, beta)
+
+
+def _spike_step_bwd(res, g):
+    v, beta = res
+    surr = beta / jnp.square(1.0 + beta * jnp.abs(v))
+    return (g * surr.astype(g.dtype), None)
+
+
+spike_step.defvjp(_spike_step_fwd, _spike_step_bwd)
+
+
+@jax.custom_vjp
+def round_ste(x: jax.Array) -> jax.Array:
+    """Round with straight-through gradient."""
+    return jnp.round(x)
+
+
+def _round_ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _round_ste_bwd(_, g):
+    return (g,)
+
+
+round_ste.defvjp(_round_ste_fwd, _round_ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# LIF neuron (eq 1)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    """Static LIF hyperparameters (per-boundary)."""
+
+    beta: float = 0.9          # membrane decay e^{-dt/tau}
+    surrogate_slope: float = 10.0
+    reset: str = "subtract"    # "subtract" | "zero"
+
+
+def lif_step(u: jax.Array, i_t: jax.Array, theta: jax.Array,
+             p: LIFParams) -> tuple[jax.Array, jax.Array]:
+    """One LIF tick: U_{t+1} = beta*U_t + (1-beta)*I_t, spike on U>=theta.
+
+    Returns (new_membrane, spike).  ``theta`` may be per-channel
+    (learnable) and is broadcast against ``u``.
+    """
+    u = p.beta * u + (1.0 - p.beta) * i_t
+    s = spike_step(u - theta, p.surrogate_slope)
+    if p.reset == "subtract":
+        u = u - s * theta
+    else:
+        u = u * (1.0 - s)
+    return u, s
+
+
+def lif_rate_encode(x: jax.Array, theta: jax.Array, T: int,
+                    p: LIFParams = LIFParams()) -> tuple[jax.Array, jax.Array]:
+    """Paper-faithful T-tick LIF encoder (lax.scan over ticks).
+
+    The activation ``x`` is held as a constant input current for T ticks
+    (static-data rate coding, paper §3.3: "static dataset inputs must be
+    encoded with multiple timesteps").  Returns:
+
+      counts: float array, values in {0..T} (sum of the spike train;
+              float so surrogate grads flow),
+      spikes: [T, *x.shape] binary train (for inspection / SNN mode).
+    """
+    def tick(u, _):
+        u, s = lif_step(u, x, theta, p)
+        return u, s
+
+    u0 = jnp.zeros_like(x)
+    _, spikes = jax.lax.scan(tick, u0, None, length=T)
+    counts = jnp.sum(spikes, axis=0)
+    return counts, spikes
+
+
+# ---------------------------------------------------------------------------
+# Deterministic rate coding (eqs 2, 3 — corrected; DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+def rate_encode(x: jax.Array, scale: jax.Array, theta: jax.Array,
+                T: int) -> jax.Array:
+    """Closed-form deterministic rate code: x -> spike count in {0..T}.
+
+    Equivalent to emitting a regular spike train with
+    ``count = round(clip(x,0,scale)/scale * T)`` and a learnable firing
+    threshold ``theta``: channels whose normalized drive is below
+    theta/scale emit nothing (the learned-sparsity gate).  Gradients flow
+    via straight-through rounding + surrogate threshold.
+
+    Returns float counts (for differentiability); quantize with
+    ``counts.astype(jnp.uint8)`` at the wire.
+    """
+    xn = jnp.clip(x, 0.0, None) / scale
+    gate = spike_step(x - theta, 10.0)
+    c = round_ste(jnp.clip(xn, 0.0, 1.0) * T) * gate
+    return c
+
+
+def rate_decode(counts: jax.Array, scale: jax.Array, T: int) -> jax.Array:
+    """Paper eq (3): a_i = (2^b - 1)/T * sum_t s_i(t), generalized to a
+    learned/calibrated float ``scale`` in place of (2^b - 1)."""
+    return counts.astype(scale.dtype) * (scale / T)
+
+
+# ---------------------------------------------------------------------------
+# Signed variant: boundary activations (post-norm residual streams) are
+# signed; the paper's rate code is unsigned (8-bit activations).  We encode
+# sign in a symmetric code: counts in [-T, T], carried as uint8 with bias T
+# (still <= 4 bits + 1 sign bit => fits a 5-bit field; pack8 uses 1 byte,
+# pack4 restricts T<=7).
+# ---------------------------------------------------------------------------
+
+
+def rate_encode_signed(x: jax.Array, scale: jax.Array, theta: jax.Array,
+                       T: int) -> jax.Array:
+    """Signed symmetric rate code: counts in {-T..T} (float)."""
+    mag = jnp.abs(x)
+    gate = spike_step(mag - theta, 10.0)
+    c = round_ste(jnp.clip(mag / scale, 0.0, 1.0) * T) * gate
+    return jnp.sign(x) * c
+
+
+def rate_decode_signed(counts: jax.Array, scale: jax.Array, T: int) -> jax.Array:
+    return counts.astype(scale.dtype) * (scale / T)
+
+
+def if_rate_encode(drive: jax.Array, T: int) -> jax.Array:
+    """Paper-faithful CLP rate coder (Fig 4a): integrate-and-fire
+    accumulator.  The converter "directly accumulates the activation
+    value" each tick and fires when the membrane crosses threshold
+    (unit threshold after normalization), generating a spike sequence
+    proportional to the activation.  drive in [0,1]; returns counts in
+    {0..T}.  With u0 = 0.5 the T-tick count equals round(drive*T), i.e.
+    bit-identical to the closed-form encoder.
+    """
+    def tick(u, _):
+        u = u + drive
+        s = spike_step(u - 1.0, 10.0)
+        return u - s, s
+
+    u0 = jnp.full_like(drive, 0.5)
+    _, spikes = jax.lax.scan(tick, u0, None, length=T)
+    return jnp.sum(spikes, axis=0)
+
+
+def lif_rate_encode_signed(x, theta, T, p: LIFParams = LIFParams()):
+    """Paper-faithful signed encoder: two IF populations (on/off cells).
+    Positive drive feeds one population, negative the other; the wire
+    value is the count difference.  ``theta`` is the learnable firing
+    gate (channels below it stay silent — the learned sparsity).
+    ``x`` is pre-normalized drive (x/scale)."""
+    del p  # boundary coder is the IF accumulator; LIF stays for SNN layers
+    mag = jnp.abs(x)
+    gate = spike_step(mag - theta, 10.0)
+    c_pos = if_rate_encode(jnp.clip(x, 0.0, 1.0), T)
+    c_neg = if_rate_encode(jnp.clip(-x, 0.0, 1.0), T)
+    return (c_pos - c_neg) * gate
+
+
+# ---------------------------------------------------------------------------
+# Sparsity regularizer (eq 10)
+# ---------------------------------------------------------------------------
+
+
+def sparsity_loss(counts: jax.Array, T: int, target_rate: float,
+                  lam: float) -> jax.Array:
+    """L_sparse = lam * hinge(mean firing rate - target).
+
+    The paper activates the penalty "only when the desired sparsity is
+    exceeded in the training run"; firing rate = mean(|counts|)/T.
+    """
+    rate = jnp.mean(jnp.abs(counts)) / T
+    return lam * jnp.maximum(rate - target_rate, 0.0)
+
+
+def firing_rate(counts: jax.Array, T: int) -> jax.Array:
+    """Mean firing rate in [0,1] (fraction of possible spikes emitted)."""
+    return jnp.mean(jnp.abs(counts)) / T
+
+
+def occupancy(counts: jax.Array) -> jax.Array:
+    """Fraction of channels that fired at all (1 - sparsity)."""
+    return jnp.mean((jnp.abs(counts) > 0).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Wire packing: counts {-T..T} -> uint8 (bias-T) and 4-bit two-per-byte
+# ---------------------------------------------------------------------------
+
+
+def counts_to_wire_u8(counts: jax.Array, T: int) -> jax.Array:
+    """Signed counts -> biased uint8 (value + T). Needs 2T+1 <= 256."""
+    return (counts + T).astype(jnp.uint8)
+
+
+def wire_u8_to_counts(wire: jax.Array, T: int, dtype=jnp.float32) -> jax.Array:
+    return wire.astype(dtype) - T
+
+
+def pack4(wire: jax.Array) -> jax.Array:
+    """Pack uint8 values < 16 two-per-byte along the last axis.
+
+    Last axis must be even. out[..., k] = v[2k] | v[2k+1] << 4.
+    """
+    lo = wire[..., 0::2]
+    hi = wire[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack4(packed: jax.Array) -> jax.Array:
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+# ---------------------------------------------------------------------------
+# Boundary parameter container + init
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SpikeConfig:
+    """Static config for one spike boundary."""
+
+    T: int = 15                # ticks; 15 -> signed counts fit 5 bits; use 7 for pack4
+    target_rate: float = 0.10  # paper: 90% sparsity
+    lam: float = 1e-3
+    lif: LIFParams = LIFParams()
+    faithful: bool = False     # True: lax.scan LIF train; False: closed form
+
+
+def init_spike_params(dim: int, dtype=jnp.float32) -> dict:
+    """Learnable per-channel threshold + scale for one boundary."""
+    return {
+        "theta": jnp.full((dim,), 0.01, dtype),
+        "log_scale": jnp.zeros((dim,), dtype),  # scale = exp(log_scale)
+    }
+
+
+def encode(x: jax.Array, params: dict, cfg: SpikeConfig) -> jax.Array:
+    """Activation -> signed float counts in {-T..T}. Differentiable."""
+    scale = jnp.exp(params["log_scale"]).astype(x.dtype)
+    theta = params["theta"].astype(x.dtype)
+    if cfg.faithful:
+        # IF accumulator over T ticks; scale normalizes drive, and the
+        # learnable gate is applied in normalized units.
+        return lif_rate_encode_signed(x / scale, theta / scale, cfg.T,
+                                      cfg.lif)
+    return rate_encode_signed(x, scale, theta, cfg.T)
+
+
+def decode(counts: jax.Array, params: dict, cfg: SpikeConfig,
+           dtype=jnp.bfloat16) -> jax.Array:
+    scale = jnp.exp(params["log_scale"]).astype(dtype)
+    return rate_decode_signed(counts, scale, cfg.T).astype(dtype)
+
+
+def roundtrip_vjp(x, theta, log_scale, g, cfg: SpikeConfig,
+                  surr_beta: float = 10.0):
+    """Hand-derived VJP of y = decode(encode(x)) for the signed rate code.
+
+    y = sign(x) * gate(|x|-theta) * (s/T) * round_ste(clip(|x|/s,0,1)*T)
+
+    STE through round, surrogate fast-sigmoid through the gate:
+      dy/dx  = gate * 1[0<|x|<s]  +  (c_mag*s/T) * surr(|x|-theta)
+      dy/dth = -sign(x) * c_mag * (s/T) * surr(|x|-theta)
+      dy/dls = sign(x)*gate * ( -|x| * 1[in] + c_mag*s/T )
+
+    ~5 elementwise ops, no linearization residuals — this is what makes
+    the boundary backward HBM-neutral (EXPERIMENTS.md §Perf, iteration 1).
+    """
+    f32 = jnp.float32
+    xf = x.astype(f32)
+    gf = g.astype(f32)
+    s = jnp.exp(log_scale.astype(f32))
+    th = theta.astype(f32)
+    T = float(cfg.T)
+    mag = jnp.abs(xf)
+    sgn = jnp.sign(xf)
+    in_rng = ((mag > 0) & (mag < s)).astype(f32)
+    gate = (mag >= th).astype(f32)
+    c_mag = jnp.round(jnp.clip(mag / s, 0.0, 1.0) * T)
+    ymag = c_mag * (s / T)
+    v = mag - th
+    surr = surr_beta / jnp.square(1.0 + surr_beta * jnp.abs(v))
+
+    dx = gf * (gate * in_rng + ymag * surr)
+    dth = -gf * sgn * ymag * surr
+    dls = gf * sgn * gate * (-mag * in_rng + ymag)
+    # reduce param grads over token dims
+    red = tuple(range(x.ndim - 1))
+    return (dx.astype(x.dtype),
+            jnp.sum(dth, axis=red).astype(theta.dtype),
+            jnp.sum(dls, axis=red).astype(log_scale.dtype))

@@ -1,0 +1,95 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else (this CPU container)
+they run in interpret mode, which executes the kernel body in Python and
+is used by the test suite to validate against the ``ref.py`` oracles.
+
+Ragged shapes are padded up to block multiples here so the kernels can
+assume aligned tiles.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .count_matmul import count_matmul_pallas
+from .lif_encode import lif_encode_pallas
+from .pack4 import pack4_pallas, unpack4_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int):
+    m, c = x.shape
+    pm = (-m) % mult0
+    pc = (-c) % mult1
+    if pm or pc:
+        x = jnp.pad(x, ((0, pm), (0, pc)))
+    return x, (m, c)
+
+
+@partial(jax.jit, static_argnames=("T", "interpret"))
+def lif_encode(x: jax.Array, theta: jax.Array, scale: jax.Array, *,
+               T: int = 15,
+               interpret: bool | None = None) -> jax.Array:
+    """Fused T-tick IF rate encoder. x [M,C] -> int8 counts [M,C]."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    (M, C) = x.shape
+    bm = 8 if M < 256 else 256
+    bc = 128 if C < 512 else 512
+    xp, (m0, c0) = _pad_to(x, bm, bc)
+    tp = jnp.pad(theta, (0, xp.shape[1] - C), constant_values=1e9)
+    sp = jnp.pad(scale, (0, xp.shape[1] - C), constant_values=1.0)
+    out = lif_encode_pallas(xp, tp, sp, T=T, block_m=bm,
+                            block_c=bc, interpret=interp)
+    return out[:m0, :c0]
+
+
+@partial(jax.jit, static_argnames=("T", "out_dtype", "interpret"))
+def count_matmul(counts: jax.Array, w: jax.Array, scale: jax.Array, *,
+                 T: int = 15, out_dtype=jnp.bfloat16,
+                 interpret: bool | None = None) -> jax.Array:
+    """int8 counts [M,K] x w [K,N] with fused rate decode."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    M, K = counts.shape
+    _, N = w.shape
+    bm = 8 if M < 256 else 256
+    bn = 128 if N < 256 else 256
+    bk = 128 if K < 512 else 512
+    cp, (m0, _) = _pad_to(counts, bm, bk)
+    wp, _ = _pad_to(w, bk, bn)
+    sp = jnp.pad(scale, (0, cp.shape[1] - K))
+    out = count_matmul_pallas(cp, wp, sp, T=T, block_m=bm, block_n=bn,
+                              block_k=bk, out_dtype=out_dtype,
+                              interpret=interp)
+    return out[:m0, :N]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def pack4(wire: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    interp = (not _on_tpu()) if interpret is None else interpret
+    M, C = wire.shape
+    bm = 8 if M < 256 else 256
+    bc = 256 if C < 1024 else 1024
+    xp, (m0, _) = _pad_to(wire, bm, bc)
+    out = pack4_pallas(xp, block_m=bm, block_c=bc, interpret=interp)
+    return out[:m0, : C // 2]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def unpack4(packed: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    interp = (not _on_tpu()) if interpret is None else interpret
+    M, C2 = packed.shape
+    bm = 8 if M < 256 else 256
+    bc = 128 if C2 < 512 else 512
+    xp, (m0, _) = _pad_to(packed, bm, bc)
+    out = unpack4_pallas(xp, block_m=bm, block_c=bc, interpret=interp)
+    return out[:m0, : C2 * 2]
+
+
+__all__ = ["lif_encode", "count_matmul", "pack4", "unpack4", "ref"]

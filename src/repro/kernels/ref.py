@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are asserted against
+(tests/test_kernels.py sweeps shapes/dtypes with assert_allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lif_encode_ref(x: jax.Array, theta: jax.Array, scale: jax.Array,
+                   *, T: int = 15) -> jax.Array:
+    """Reference T-tick on/off IF rate encoder -> int8 signed counts."""
+    x = x.astype(jnp.float32)
+    theta = theta.astype(jnp.float32)
+    scale = scale.astype(jnp.float32)
+    gate = (jnp.abs(x) >= theta).astype(jnp.float32)
+    drive_p = jnp.clip(x / scale, 0.0, 1.0)
+    drive_n = jnp.clip(-x / scale, 0.0, 1.0)
+
+    def tick(carry, _):
+        up, un, cp, cn = carry
+        up = up + drive_p
+        un = un + drive_n
+        sp = (up >= 1.0).astype(jnp.float32)
+        sn = (un >= 1.0).astype(jnp.float32)
+        return (up - sp, un - sn, cp + sp, cn + sn), None
+
+    h = jnp.full_like(x, 0.5)
+    z = jnp.zeros_like(x)
+    (_, _, cp, cn), _ = jax.lax.scan(tick, (h, h, z, z), None, length=T)
+    return ((cp - cn) * gate).astype(jnp.int8)
+
+
+def count_matmul_ref(counts: jax.Array, w: jax.Array, scale: jax.Array,
+                     *, T: int = 15, out_dtype=jnp.bfloat16) -> jax.Array:
+    """Decode-then-matmul reference: (counts * scale/T) @ w."""
+    a = counts.astype(jnp.float32) * (scale.astype(jnp.float32) / T)[None, :]
+    y = a @ w.astype(jnp.float32)
+    return y.astype(out_dtype)
+
+
+def pack4_ref(wire: jax.Array) -> jax.Array:
+    lo = wire[..., 0::2]
+    hi = wire[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack4_ref(packed: jax.Array) -> jax.Array:
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)

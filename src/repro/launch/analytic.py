@@ -1,0 +1,244 @@
+"""Analytic per-device cost model (FLOPs / HBM bytes / ICI wire bytes).
+
+Why this exists: XLA's ``cost_analysis()`` counts a while-loop (scan)
+body ONCE regardless of trip count (verified in EXPERIMENTS.md §Dry-run
+notes), and our stacks scan over layer units — so the compiled numbers
+are per-unit.  This module computes the exact structural totals from the
+config, including:
+
+  * our implementation's real attention cost (full S^2 chunked flash —
+    the causal half is masked, not skipped: that waste shows up in the
+    useful-FLOPs ratio on purpose),
+  * remat policy (per-block checkpoint: backward recomputes the forward,
+    including its boundary collectives and FSDP weight gathers),
+  * codec-exact wire bytes (bf16 / int8 counts / packed uint4), with
+    forward spike-coded and backward cotangents at bf16 (the paper
+    sparsifies inference-direction traffic; coded-backward is a §Perf
+    hillclimb lever).
+
+Cross-check: parse_collectives() on the compiled HLO gives the per-unit
+wire bytes; analytic per-unit values must match it (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..configs.base import ModelConfig, ShapeCell
+from ..models.blocks_attn import attn_dims
+from ..models.blocks_moe import moe_dims
+from ..models.blocks_rnn import mlstm_dims, rwkv_dims
+from ..models.blocks_ssm import ssm_dims
+from .roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+import math
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0          # per device
+    hbm: float = 0.0            # per device bytes
+    wire: float = 0.0           # per device ICI bytes
+
+    def __add__(self, o):
+        return Cost(self.flops + o.flops, self.hbm + o.hbm,
+                    self.wire + o.wire)
+
+    def scaled(self, f=1.0, h=1.0, w=1.0):
+        return Cost(self.flops * f, self.hbm * h, self.wire * w)
+
+
+def wire_bytes_per_elem(codec: str) -> float:
+    return {"none": 2.0, "int8": 1.0, "spike": 1.0, "spike_fused": 1.0,
+            "spike_pack4": 0.5, "sparse_topk": 0.625}[codec]
+
+
+def _boundary(B, S, D, tp, w):
+    """One gather-in + one scatter-out of [B,S,D] over tp at w B/elem."""
+    if tp == 1:
+        return 0.0
+    return 2 * (tp - 1) / tp * B * S * D * w
+
+
+def block_cost(kind: str, cfg: ModelConfig, B: int, S: int, tp: int,
+               dp: int, w: float) -> Cost:
+    """Forward cost of one block on one device (gathered-seq domain)."""
+    D = cfg.d_model
+    c = Cost()
+    act_b = 2.0  # bf16
+    if kind in ("attn", "global", "local", "attn_moe"):
+        d = attn_dims(cfg, tp)
+        dh = d["dh"]
+        hkv = d["Hkv"] if d["kv_rep"] else d["Hkv_loc"]
+        c.flops += 2 * B * S * D * (d["Hq_loc"] + 2 * hkv) * dh  # qkv
+        c.flops += 4 * B * S * S * d["Hq_loc"] * dh              # full-S^2
+        c.flops += 2 * B * S * d["Hq_loc"] * dh * D              # out proj
+        c.hbm += B * S * D * act_b * 6 + 2 * B * S * d["Hq_loc"] * dh * act_b
+        c.wire += _boundary(B, S, D, tp, w)
+        ffn = "moe" if kind == "attn_moe" else "mlp"
+    elif kind in ("mamba", "mamba_mlp", "mamba_moe"):
+        d = ssm_dims(cfg, tp)
+        Di, N, R = d["Di_loc"], d["N"], d["R"]
+        c.flops += 2 * B * S * D * 2 * Di + 2 * B * S * Di * d["K"]
+        c.flops += 2 * B * S * D * (2 * N + R) + 2 * B * S * R * Di
+        c.flops += 14 * B * S * Di * N                      # scan + readout
+        c.flops += 2 * B * S * Di * D
+        c.hbm += B * S * (D * 2 + Di * 4) * act_b
+        c.wire += _boundary(B, S, D, tp, w)
+        ffn = {"mamba": None, "mamba_mlp": "mlp", "mamba_moe": "moe"}[kind]
+    elif kind == "mlstm":
+        d = mlstm_dims(cfg, tp)
+        H, dh = d["H_loc"], d["dh"]
+        c.flops += 2 * B * S * D * (4 * H * dh + 2 * H)
+        c.flops += 6 * B * S * H * dh * dh
+        c.flops += 2 * B * S * H * dh * D
+        c.hbm += B * S * (D * 4 + H * dh * 4) * act_b
+        c.wire += _boundary(B, S, D, tp, w)
+        ffn = None
+    elif kind == "slstm":
+        d = mlstm_dims(cfg, tp)
+        H, dh = d["H_loc"], d["dh"]
+        c.flops += 2 * B * S * D * 4 * H * dh
+        c.flops += 2 * B * S * H * dh * 4 * dh
+        c.flops += 2 * B * S * H * dh * D
+        c.hbm += B * S * D * 4 * act_b
+        c.wire += _boundary(B, S, D, tp, w)
+        ffn = None
+    elif kind == "rwkv":
+        d = rwkv_dims(cfg, tp)
+        C_loc = d["C_loc"]
+        F_loc = (cfg.ff_padded(tp) or 4 * D) // tp
+        c.flops += 2 * B * S * D * 3 * C_loc + 12 * B * S * C_loc \
+            + 2 * B * S * C_loc * D
+        c.flops += 2 * B * S * (D * F_loc + F_loc * D + D * D)
+        c.hbm += B * S * D * 8 * act_b
+        c.wire += 2 * _boundary(B, S, D, tp, w)   # tm + cm boundaries
+        ffn = None
+    else:
+        raise ValueError(kind)
+
+    if kind in ("attn", "global", "local", "attn_moe", "mamba_mlp",
+                "mamba_moe"):
+        if ffn == "mlp":
+            F_loc = cfg.ff_padded(tp) // tp
+            c.flops += 6 * B * S * D * F_loc
+            c.hbm += B * S * (2 * D + 3 * F_loc) * act_b
+            c.wire += _boundary(B, S, D, tp, w)
+        elif ffn == "moe":
+            d = moe_dims(cfg, tp)
+            T_loc = B * S // tp
+            k = cfg.top_k
+            C = max(1, math.ceil(T_loc * k / d["E"] * cfg.capacity_factor))
+            c.flops += 2 * T_loc * D * d["E"]                 # router
+            c.flops += 6 * d["E_loc"] * C * tp * D * d["Fe"]  # experts
+            if d["Fs"]:
+                c.flops += 6 * T_loc * D * d["Fs"]            # shared
+            c.hbm += (d["E"] * C * D * 2 + T_loc * D * 2) * act_b
+            # two all_to_alls of the [E, C, D] buffer
+            c.wire += 2 * (tp - 1) / tp * d["E"] * C * D * w
+    return c
+
+
+def analytic_cost(cfg: ModelConfig, cell: ShapeCell, chips: int, tp: int,
+                  mode: str, codec: str | None = None) -> Cost:
+    """Total per-device cost for one step of ``mode``."""
+    codec = codec or (cfg.codec if cfg.hnn_mode != "ann" else "none")
+    w = wire_bytes_per_elem(codec)
+    dp = chips // tp
+    B_loc = max(1, cell.global_batch // dp)
+    D, V = cfg.d_model, cfg.vocab_padded(tp)
+    V_loc = V // tp
+    p_total, _ = _param_count(cfg)
+    p_dev_gathered = p_total * 2.0 / tp           # bf16, after dp-gather
+    p_shard = p_total * 2.0 / (tp * dp)
+
+    if mode in ("train", "prefill"):
+        S = cell.seq_len if not cfg.is_encdec else cell.seq_len // 2
+        fwd = Cost()
+        for kind in cfg.pattern:
+            fwd = fwd + block_cost(kind, cfg, B_loc, S, tp, dp, w)
+        fwd = fwd.scaled(cfg.n_units, cfg.n_units, cfg.n_units)
+        if cfg.is_encdec:
+            enc = block_cost("attn", cfg, B_loc, S, tp, dp, w)
+            cross = block_cost("attn", cfg, B_loc, S, tp, dp, w)
+            fwd = fwd + enc.scaled(cfg.n_enc_layers, cfg.n_enc_layers,
+                                   cfg.n_enc_layers) \
+                + cross.scaled(cfg.n_units, cfg.n_units, cfg.n_units)
+        # embedding scatter + head gather + head matmul
+        head = Cost(2 * B_loc * S * D * V_loc,
+                    B_loc * S * V_loc * 4 + V_loc * D * 2,
+                    _boundary(B_loc, S, D, tp, w))
+        # FSDP weight gathers (fwd) + weight/optimizer HBM traffic
+        fsdp_w = (dp - 1) / dp * p_dev_gathered if dp > 1 else 0.0
+        weights = Cost(0, p_dev_gathered, fsdp_w)
+
+        if mode == "prefill":
+            total = fwd + head + weights
+            return total
+        # train: fwd + remat-fwd + bwd(2x flops); collectives: coded fwd
+        # runs twice (remat re-gathers), bwd transposes run at bf16
+        bwd_wire_ratio = 2.0 / w                  # bf16 cotangents
+        total = fwd.scaled(4.0, 3.0, 2.0 + bwd_wire_ratio) \
+            + head.scaled(4.0, 3.0, 2.0 + bwd_wire_ratio) \
+            + weights.scaled(1.0, 3.0, 3.0)       # fwd+remat gather+grad RS
+        # optimizer state traffic: read p,m,v + write p,m,v (f32 moments)
+        total.hbm += p_shard * (1 + 2 + 2) + p_shard * 2 * (2 + 2)
+        return total
+
+    # decode: one token; KV/state cache streamed once
+    S = cell.seq_len
+    cp = tp if cell.global_batch % dp == 0 else tp * dp
+    B = B_loc if cell.global_batch % dp == 0 else cell.global_batch
+    c = Cost()
+    d = attn_dims(cfg, tp)
+    for kind in cfg.pattern:
+        if kind in ("attn", "global", "local", "attn_moe"):
+            Ss = S // cp
+            c.flops += 4 * B * d["Hq"] * d["dh"] * Ss      # cache attn
+            c.flops += 2 * B * D * (d["Hq"] + 2 * d["Hkv"]) * d["dh"] / tp \
+                + 2 * B * d["Hq_loc"] * d["dh"] * D
+            c.hbm += B * Ss * d["Hkv"] * d["dh"] * 2 * 2   # k+v read
+            c.wire += B * d["Hq"] * d["dh"] * 2 * 2        # q gather+psum
+        elif kind.startswith("mamba"):
+            sd = ssm_dims(cfg, tp)
+            c.flops += 2 * B * D * 2 * sd["Di_loc"] \
+                + 10 * B * sd["Di_loc"] * sd["N"] \
+                + 2 * B * sd["Di_loc"] * D
+            c.hbm += B * sd["Di_loc"] * sd["N"] * 4 * 2
+            c.wire += B * D * 2 * 2
+        elif kind in ("mlstm", "slstm"):
+            md = mlstm_dims(cfg, tp)
+            c.flops += 2 * B * D * 5 * md["H_loc"] * md["dh"] \
+                + 6 * B * md["H_loc"] * md["dh"] ** 2
+            c.hbm += B * md["H_loc"] * md["dh"] ** 2 * 4 * 2
+            c.wire += B * D * 2 * 2
+        elif kind == "rwkv":
+            rd = rwkv_dims(cfg, tp)
+            c.flops += 2 * B * D * 4 * rd["C_loc"] + 12 * B * rd["C_loc"]
+            c.wire += 2 * B * D * 2 * 2
+        if kind in ("attn_moe", "mamba_moe"):
+            mdd = moe_dims(cfg, tp)
+            C = max(1, math.ceil(B * cfg.top_k / mdd["E"] * 4.0))
+            c.flops += 6 * mdd["E_loc"] * C * tp * D * mdd["Fe"]
+            if mdd["Fs"]:
+                c.flops += 6 * B * D * mdd["Fs"]
+            c.wire += 2 * (tp - 1) / tp * mdd["E"] * C * D * w
+        elif kind in ("attn", "global", "local", "mamba_mlp"):
+            c.flops += 6 * B * D * cfg.ff_padded(tp) // tp
+    c = c.scaled(cfg.n_units, cfg.n_units, cfg.n_units)
+    # weights read once per token step (gathered per device)
+    c.hbm += p_dev_gathered
+    c.wire += (dp - 1) / dp * p_dev_gathered if dp > 1 else 0.0
+    # head
+    c.flops += 2 * B * D * V_loc
+    c.hbm += V_loc * D * 2
+    return c
+
+
+def _param_count(cfg):
+    from .roofline import count_params
+    return count_params(cfg)
+
+
+def terms(c: Cost):
+    return {"compute_s": c.flops / PEAK_FLOPS, "memory_s": c.hbm / HBM_BW,
+            "collective_s": c.wire / ICI_BW}

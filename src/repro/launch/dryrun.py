@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements — jax locks the
+device count on first init, and the production meshes need 512 host
+placeholder devices (16x16 single-pod, 2x16x16 multi-pod).
+
+Per cell this script:
+  1. builds the production mesh and the cell plan,
+  2. lowers the train_step / prefill_step / serve_step against
+     ShapeDtypeStruct stand-ins (no allocation),
+  3. compiles, prints memory_analysis() (proves it fits) and
+     cost_analysis() (FLOPs/bytes for the roofline),
+  4. parses collective wire bytes from the partitioned HLO and emits the
+     three-term roofline (EXPERIMENTS.md SS Dry-run / SS Roofline).
+
+Results are appended to a JSON cache so the 80-cell sweep is resumable
+(fault tolerance for the dry-run itself).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, codec: str,
+             hnn_mode: str, out_path: str | None):
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import ASSIGNED, SHAPES, get_config
+    from ..models import params as PR
+    from ..optim import adamw
+    from . import roofline as RL
+    from . import serve as SV
+    from . import specs as SP
+    from . import train as TR
+    from .mesh import make_production_mesh
+
+    t0 = time.time()
+    cfg = get_config(arch, codec=codec, hnn_mode=hnn_mode)
+    cell = SHAPES[shape]
+
+    # applicability gates (DESIGN.md SS5)
+    if shape == "long_500k" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape,
+                "multi_pod": multi_pod, "codec": codec,
+                "status": "skipped",
+                "reason": "long_500k needs sub-quadratic attention; "
+                          "full-attention arch (DESIGN.md SS5)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for n in mesh.axis_names:
+        chips *= mesh.shape[n]
+    plan = SP.make_plan(cfg, cell, mesh)
+
+    mode = cell.kind
+    if mode == "train":
+        step, pspecs, opt_specs, bspecs = TR.make_train_step(
+            cfg, plan, mesh, with_optimizer=True)
+        aparams, _ = TR.abstract_sharded_params(cfg, plan)
+        aopt = adamw.abstract_opt_state(aparams)
+        abatch, _ = SP.train_input_specs(plan)
+        lowered = step.lower(aparams, aopt, abatch)
+    elif mode == "prefill":
+        step, pspecs, bspecs, cspecs = SV.make_prefill_step(cfg, plan, mesh)
+        aparams, _ = TR.abstract_sharded_params(cfg, plan)
+        abatch, _ = SP.train_input_specs(plan)
+        lowered = step.lower(aparams, abatch)
+    else:  # decode
+        step, pspecs, ispecs = SV.make_decode_step(
+            cfg, plan, mesh,
+            replicate_weights=os.environ.get("REPRO_SERVE_REPLICATED",
+                                             "0") == "1")
+        aparams, _ = TR.abstract_sharded_params(cfg, plan)
+        ainputs, _ = SP.decode_input_specs(plan)
+        lowered = step.lower(aparams, ainputs["cache"], ainputs["token"],
+                             ainputs["pos"])
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    mem = {k: int(getattr(ma, k))
+           for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes")
+           if hasattr(ma, k)}
+    print(f"memory_analysis[{arch}/{shape}]:", mem)
+    cost = compiled.cost_analysis()
+    print(f"cost_analysis[{arch}/{shape}]: flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e}")
+
+    hlo = compiled.as_text()
+    mf = RL.model_flops_per_chip(cfg, cell, chips, mode)
+    rf = RL.analyze(cost, hlo, mf)
+
+    rec = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "codec": codec, "hnn_mode": hnn_mode, "mode": mode,
+        "chips": chips, "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem, "roofline": rf.to_dict(),
+    }
+    return rec
+
+
+def append_result(rec, out_path):
+    with open(out_path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+def already_done(out_path, key):
+    try:
+        with open(out_path) as f:
+            for line in f:
+                r = json.loads(line)
+                if (r["arch"], r["shape"], r["multi_pod"],
+                        r.get("codec")) == key:
+                    return True
+    except FileNotFoundError:
+        pass
+    return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--codec", default=None,
+                    help="boundary codec override (default: config's)")
+    ap.add_argument("--hnn-mode", default="hnn")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--subprocess-cells", action="store_true",
+                    help="run each cell in a fresh subprocess (isolates "
+                         "XLA state; resumable)")
+    args = ap.parse_args()
+
+    from ..configs import ASSIGNED, SHAPES, get_config
+
+    archs = list(ASSIGNED) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+
+    if args.subprocess_cells or (len(archs) > 1 or len(shapes) > 1):
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        for a in archs:
+            for s in shapes:
+                codec = args.codec or get_config(a).codec
+                if already_done(args.out, (a, s, args.multi_pod, codec)):
+                    print(f"cached: {a}/{s} multi_pod={args.multi_pod}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", a, "--shape", s, "--out", args.out,
+                       "--hnn-mode", args.hnn_mode]
+                if args.multi_pod:
+                    cmd.append("--multi-pod")
+                if args.codec:
+                    cmd.extend(["--codec", args.codec])
+                print(">>>", " ".join(cmd), flush=True)
+                r = subprocess.run(cmd)
+                if r.returncode != 0:
+                    append_result({"arch": a, "shape": s,
+                                   "multi_pod": args.multi_pod,
+                                   "codec": codec, "status": "error",
+                                   "reason": f"exit {r.returncode}"},
+                                  args.out)
+        return
+
+    arch, shape = archs[0], shapes[0]
+    codec = args.codec or get_config(arch).codec
+    try:
+        rec = run_cell(arch, shape, args.multi_pod, codec, args.hnn_mode,
+                       args.out)
+    except Exception as e:
+        traceback.print_exc()
+        rec = {"arch": arch, "shape": shape, "multi_pod": args.multi_pod,
+               "codec": codec, "status": "error",
+               "reason": f"{type(e).__name__}: {e}"[:500]}
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        append_result(rec, args.out)
+    print(json.dumps(rec, indent=1)[:2000])
+    sys.exit(0 if rec.get("status") in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

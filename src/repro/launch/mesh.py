@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state).  Single-pod: (data=16, model=16) = 256 chips;
+multi-pod: (pod=2, data=16, model=16) = 512 chips.  The "pod" axis folds
+into the FSDP/data-parallel axes everywhere (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (smoke tests, examples)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axes(mesh) -> tuple[tuple[str, ...], str]:
+    """(dp_axes, tp_axis) for a mesh built by this module."""
+    names = mesh.axis_names
+    assert names[-1] == "model", names
+    return tuple(names[:-1]), "model"

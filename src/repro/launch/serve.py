@@ -1,0 +1,77 @@
+"""Serving steps: prefill (fills context-parallel caches) and decode.
+
+decode_step lowers the ``serve_step`` required by the decode_* / long_*
+cells: one new token against a KV/state cache of cell.seq_len, with the
+cache seq-sharded over the context-parallel axes (ctx.cp).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import model as M
+from .specs import (CellPlan, cache_specs, decode_input_specs, make_context,
+                    train_input_specs)
+from .train import shard_params_specs
+
+
+def make_prefill_step(cfg, plan: CellPlan, mesh):
+    """prefill(params, batch) -> (last_logits_local, cache)."""
+    defs, pspecs, _ = shard_params_specs(cfg, plan)
+    ctx = make_context(plan, "prefill")
+    _, bspecs = train_input_specs(plan)
+    _, cspecs = cache_specs(plan)
+    bs = None if not plan.batch_sharded else (
+        plan.dp if len(plan.dp) > 1 else plan.dp[0])
+
+    def step(params, batch):
+        logits, caches = M.forward_prefill(params, batch, ctx)
+        return logits, caches
+
+    fn = jax.shard_map(step, mesh=mesh,
+                       in_specs=(pspecs, bspecs),
+                       out_specs=(P(bs, "model"), cspecs),
+                       check_vma=False)
+    return jax.jit(fn), pspecs, bspecs, cspecs
+
+
+def make_decode_step(cfg, plan: CellPlan, mesh, replicate_weights=False):
+    """decode(params, cache, token, pos) -> (logits_local, new_cache).
+
+    ``replicate_weights=True`` stores params replicated over the data
+    axes (tp-sharded only) — the production inference layout: no per-step
+    FSDP weight gathers on the decode path (§Perf hillclimb, cell C).
+    """
+    defs, pspecs, _ = shard_params_specs(cfg, plan)
+    ctx = make_context(plan, "decode")
+    if replicate_weights:
+        import jax as _jax
+        from jax.sharding import PartitionSpec as _P
+
+        def strip_dp(spec):
+            ents = tuple(None if (e is not None and e != "model") else e
+                         for e in spec)
+            return _P(*ents)
+        pspecs = _jax.tree.map(strip_dp, pspecs,
+                               is_leaf=lambda x: isinstance(x, _P))
+        ctx = ctx.with_(dp_size=1)   # fsdp_gather becomes a no-op
+    _, ispecs = decode_input_specs(plan)
+    bs = ispecs["token"]
+
+    def step(params, cache, token, pos):
+        return M.forward_decode(params, cache, token, pos, ctx)
+
+    fn = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(pspecs, ispecs["cache"], ispecs["token"], ispecs["pos"]),
+        out_specs=(P(*(tuple(bs) + ("model",))), ispecs["cache"]),
+        check_vma=False)
+    return jax.jit(fn, donate_argnums=(1,)), pspecs, ispecs
+
+
+def greedy_sample(logits_local, mesh, plan: CellPlan):
+    """Greedy next-token from tp-sharded logits [B, V_loc] (host-side)."""
+    # logits gathered by jit output sharding; argmax on host is fine for
+    # the example drivers
+    return jnp.argmax(logits_local, axis=-1).astype(jnp.int32)

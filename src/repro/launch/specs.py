@@ -1,0 +1,182 @@
+"""Input/cache ShapeDtypeStructs + PartitionSpecs per (arch x shape cell).
+
+This is the dry-run contract: everything jit'd in train.py/serve.py is
+lowered against these stand-ins (weak-type-correct, shardable, no device
+allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeCell
+from ..models import blocks_attn, blocks_rnn, blocks_ssm
+from ..models.context import Context, codec_from_name
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    """Static plan for one (arch, shape, mesh) cell."""
+
+    cfg: ModelConfig
+    cell: ShapeCell
+    dp: tuple                    # data axes
+    tp: str
+    dp_size: int
+    tp_size: int
+    batch_sharded: bool          # batch over dp? (False -> replicated)
+    cp: tuple                    # context-parallel axes for decode
+
+
+def make_plan(cfg: ModelConfig, cell: ShapeCell, mesh) -> CellPlan:
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n != "model")
+    tp = "model"
+    dp_size = 1
+    for n in dp:
+        dp_size *= mesh.shape[n]
+    tp_size = mesh.shape[tp]
+    batch_sharded = cell.global_batch % dp_size == 0
+    if cell.kind == "decode":
+        cp = (tp,) if batch_sharded else dp + (tp,)
+    else:
+        cp = (tp,)
+    return CellPlan(cfg, cell, dp, tp, dp_size, tp_size, batch_sharded, cp)
+
+
+def make_context(plan: CellPlan, mode: str) -> Context:
+    cfg = plan.cfg
+    codec = codec_from_name(cfg.codec, cfg.hnn_mode)
+    return Context(cfg=cfg, dp=plan.dp, tp=plan.tp, dp_size=plan.dp_size,
+                   tp_size=plan.tp_size, codec=codec, mode=mode, cp=plan.cp)
+
+
+def _bspec(plan: CellPlan):
+    """PartitionSpec entry for the global batch dim."""
+    if not plan.batch_sharded:
+        return None
+    return plan.dp if len(plan.dp) > 1 else plan.dp[0]
+
+
+# ---------------------------------------------------------------------------
+# train / prefill inputs
+# ---------------------------------------------------------------------------
+
+
+def train_input_specs(plan: CellPlan):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for a train batch."""
+    cfg, cell = plan.cfg, plan.cell
+    B, S = cell.global_batch, cell.seq_len
+    bs = _bspec(plan)
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    specs = {"tokens": P(bs, plan.tp), "labels": P(bs, plan.tp)}
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.is_encdec:
+        # half the token budget to the encoder (frame embeddings), half
+        # to the decoder (text): S_enc = S_dec = S/2
+        S2 = S // 2
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S2), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S2), jnp.int32),
+                 "enc_embeds": jax.ShapeDtypeStruct((B, S2, cfg.d_model),
+                                                    cfg.dtype)}
+        specs = {"tokens": P(bs, plan.tp), "labels": P(bs, plan.tp),
+                 "enc_embeds": P(bs, plan.tp, None)}
+    if cfg.rope_kind == "mrope":
+        batch["positions3"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+        specs["positions3"] = P(None, bs, plan.tp)
+    return batch, specs
+
+
+# ---------------------------------------------------------------------------
+# decode inputs (KV/state caches)
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(plan: CellPlan):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the decode cache."""
+    cfg, cell = plan.cfg, plan.cell
+    tp = plan.tp_size
+    U = cfg.n_units
+    B, S = cell.global_batch, cell.seq_len
+    bs = _bspec(plan)
+    cps = plan.cp if len(plan.cp) > 1 else plan.cp[0]
+    dt = cfg.dtype
+
+    structs: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    d_at = blocks_attn.attn_dims(cfg, tp)
+
+    for i, kind in enumerate(cfg.pattern):
+        st: dict[str, Any] = {}
+        sp: dict[str, Any] = {}
+        if kind in ("attn", "global", "local", "attn_moe"):
+            shape = (U, B, S, d_at["Hkv"], d_at["dh"])
+            st["kv"] = {"k": jax.ShapeDtypeStruct(shape, dt),
+                        "v": jax.ShapeDtypeStruct(shape, dt)}
+            sp["kv"] = {"k": P(None, bs, cps, None, None),
+                        "v": P(None, bs, cps, None, None)}
+            if cfg.is_encdec:
+                S_enc = max(cell.seq_len // 8, 32)
+                xshape = (U, B, S_enc, d_at["Hkv"], d_at["dh"])
+                st["cross_kv"] = {"k": jax.ShapeDtypeStruct(xshape, dt),
+                                  "v": jax.ShapeDtypeStruct(xshape, dt)}
+                sp["cross_kv"] = sp["kv"]
+        elif kind in ("mamba", "mamba_mlp", "mamba_moe"):
+            d = blocks_ssm.ssm_dims(cfg, tp)
+            st["ssm_state"] = {
+                "conv": jax.ShapeDtypeStruct((U, B, d["K"] - 1, d["Di"]), dt),
+                "ssm": jax.ShapeDtypeStruct((U, B, d["Di"], d["N"]), F32)}
+            sp["ssm_state"] = {"conv": P(None, bs, None, plan.tp),
+                               "ssm": P(None, bs, plan.tp, None)}
+        elif kind == "mlstm":
+            d = blocks_rnn.mlstm_dims(cfg, tp)
+            st["rnn_state"] = {
+                "C": jax.ShapeDtypeStruct((U, B, d["H"], d["dh"], d["dh"]),
+                                          F32),
+                "n": jax.ShapeDtypeStruct((U, B, d["H"], d["dh"]), F32),
+                "m": jax.ShapeDtypeStruct((U, B, d["H"]), F32)}
+            sp["rnn_state"] = {"C": P(None, bs, plan.tp, None, None),
+                               "n": P(None, bs, plan.tp, None),
+                               "m": P(None, bs, plan.tp)}
+        elif kind == "slstm":
+            d = blocks_rnn.mlstm_dims(cfg, tp)
+            shape = (U, B, d["H"], d["dh"])
+            st["rnn_state"] = {k: jax.ShapeDtypeStruct(shape, F32)
+                               for k in ("c", "n", "h", "m")}
+            sp["rnn_state"] = {k: P(None, bs, plan.tp, None)
+                               for k in ("c", "n", "h", "m")}
+        elif kind == "rwkv":
+            d = blocks_rnn.rwkv_dims(cfg, tp)
+            D = cfg.d_model
+            st["rwkv_state"] = {
+                "x_tm": jax.ShapeDtypeStruct((U, B, D), dt),
+                "x_cm": jax.ShapeDtypeStruct((U, B, D), dt),
+                "aa": jax.ShapeDtypeStruct((U, B, d["C"]), F32),
+                "bb": jax.ShapeDtypeStruct((U, B, d["C"]), F32),
+                "pp": jax.ShapeDtypeStruct((U, B, d["C"]), F32)}
+            sp["rwkv_state"] = {
+                "x_tm": P(None, bs, None), "x_cm": P(None, bs, None),
+                "aa": P(None, bs, plan.tp), "bb": P(None, bs, plan.tp),
+                "pp": P(None, bs, plan.tp)}
+        structs[f"pos{i}"] = st
+        specs[f"pos{i}"] = sp
+    return structs, specs
+
+
+def decode_input_specs(plan: CellPlan):
+    """(inputs, specs) for one decode step: cache + token + pos."""
+    cfg, cell = plan.cfg, plan.cell
+    B = cell.global_batch
+    bs = _bspec(plan)
+    cache, cache_sp = cache_specs(plan)
+    inputs = {"cache": cache,
+              "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+              "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs = {"cache": cache_sp, "token": P(bs), "pos": P()}
+    return inputs, specs

@@ -1,0 +1,345 @@
+"""Attention + dense-MLP blocks (per-shard, spike boundaries at collectives).
+
+Sharding (Megatron-style TP with sequence parallelism):
+  activations x [B_loc, S_loc, D] — batch over dp, seq over tp;
+  attention: heads over tp; MLP: d_ff over tp.
+  The 4 collectives per layer (gather-in / scatter-out for attn and MLP)
+  are exactly the die-to-die boundaries; they carry the spike wire.
+
+Decode (context-parallel): KV cache seq-sharded over ctx.cp; q heads are
+gathered (tiny) and each shard computes an LSE partial over its cache
+slice (distributed flash-decode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import boundary
+from . import common
+from .context import Context, cp_linear_index, cp_size, fsdp_gather
+from .params import pdef, spike_pdefs
+
+
+# ---------------------------------------------------------------------------
+# dims
+# ---------------------------------------------------------------------------
+
+
+def attn_dims(cfg, tp):
+    dh = cfg.d_head
+    Hkv = cfg.n_kv_heads
+    if Hkv == cfg.n_heads:                      # MHA: pad both together
+        Hq = cfg.padded(cfg.n_heads, tp)
+        Hkv_p = Hq
+        kv_rep = False
+    else:
+        Hq = cfg.padded(cfg.n_heads, tp)
+        # need Hq % Hkv == 0 for grouped layout
+        while Hq % Hkv != 0:
+            Hq += tp
+        Hkv_p = Hkv
+        kv_rep = Hkv % tp != 0
+    Hq_loc = Hq // tp
+    Hkv_loc = Hkv_p if kv_rep else Hkv_p // tp
+    return dict(dh=dh, Hq=Hq, Hq_loc=Hq_loc, Hkv=Hkv_p, Hkv_loc=Hkv_loc,
+                kv_rep=kv_rep, group=Hq // Hkv_p)
+
+
+# ---------------------------------------------------------------------------
+# parameter defs
+# ---------------------------------------------------------------------------
+
+
+def attn_defs(cfg, tp, cross=False):
+    d = attn_dims(cfg, tp)
+    D, dh = cfg.d_model, d["dh"]
+    kv_tp = None if d["kv_rep"] else 1
+    defs = {
+        "ln": pdef(D, init="zeros"),
+        "wq": pdef(D, d["Hq"] * dh, tp=1, fsdp=0),
+        "wk": pdef(D, d["Hkv"] * dh, tp=kv_tp, fsdp=0),
+        "wv": pdef(D, d["Hkv"] * dh, tp=kv_tp, fsdp=0),
+        "wo": pdef(d["Hq"] * dh, D, tp=0, fsdp=1),
+        "sp_in": spike_pdefs(D),
+        "sp_out": spike_pdefs(D),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = pdef(d["Hq"] * dh, tp=0, init="zeros")
+        defs["bk"] = pdef(d["Hkv"] * dh, tp=(None if d["kv_rep"] else 0),
+                          init="zeros")
+        defs["bv"] = pdef(d["Hkv"] * dh, tp=(None if d["kv_rep"] else 0),
+                          init="zeros")
+    if cfg.post_norm:
+        defs["post_ln"] = pdef(D, init="zeros")
+    if cfg.hnn_mode == "snn":
+        defs["sp_snn"] = spike_pdefs(d["Hq_loc"] * dh if False else D)
+    if cross:
+        defs = {f"x_{k}": v for k, v in defs.items()}
+    return defs
+
+
+def mlp_defs(cfg, tp):
+    D = cfg.d_model
+    F = cfg.ff_padded(tp)
+    defs = {
+        "ln2": pdef(D, init="zeros"),
+        "w1": pdef(D, F, tp=1, fsdp=0),
+        "w3": pdef(D, F, tp=1, fsdp=0),
+        "w2": pdef(F, D, tp=0, fsdp=1),
+        "sp_in2": spike_pdefs(D),
+        "sp_out2": spike_pdefs(D),
+    }
+    if cfg.post_norm:
+        defs["post_ln2"] = pdef(D, init="zeros")
+    if cfg.hnn_mode == "snn":
+        defs["sp_snn2"] = spike_pdefs(D)
+    return defs
+
+
+def attn_cache_defs(cfg, tp, cp_total, B_loc, S, dtype):
+    """KV cache (decode): seq-sharded over cp, full kv heads per shard."""
+    d = attn_dims(cfg, tp)
+    Ss = S // cp_total
+    shape = (B_loc, Ss, d["Hkv"], d["dh"])
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _rope(cfg, x, aux):
+    if cfg.rope_kind == "rope":
+        return common.apply_rope(x, aux["positions"], cfg.rope_theta)
+    if cfg.rope_kind == "mrope":
+        half = x.shape[-1] // 2
+        t = half - 2 * (half // 3)
+        sec = (t, half // 3, half // 3)
+        return common.apply_mrope(x, aux["positions3"], cfg.rope_theta, sec)
+    return x
+
+
+def _maybe_snn(h, p_snn, ctx):
+    """SNN mode: intra-chip activations are spike-coded too."""
+    if ctx.cfg.hnn_mode != "snn" or ctx.codec.mode == "none":
+        return h
+    return boundary._local_roundtrip(h, p_snn, ctx.codec)
+
+
+def _stats(h, p, ctx):
+    if ctx.mode == "train" and ctx.collect_stats:
+        pen, occ = boundary.boundary_penalty(h, p, ctx.codec)
+        return pen.astype(jnp.float32), occ.astype(jnp.float32)
+    z = jnp.zeros((), jnp.float32)
+    return z, z
+
+
+# ---------------------------------------------------------------------------
+# forward: train / prefill
+# ---------------------------------------------------------------------------
+
+
+def attn_fwd(p, x, ctx: Context, aux, kind="attn", prefix=""):
+    """x [B_loc, S_loc, D] -> (x', cache_or_None, penalty, occupancy)."""
+    cfg = ctx.cfg
+    d = attn_dims(cfg, ctx.tp_size)
+    dh = d["dh"]
+    g = lambda k: p[prefix + k] if prefix else p[k]
+
+    h = common.norm(x, g("ln"), cfg.norm)
+    pen, occ = _stats(h, g("sp_in"), ctx)
+    xg = boundary.coded_all_gather(h, g("sp_in"), ctx.codec, ctx.tp, axis=1)
+    B, S, D = xg.shape
+
+    wq = fsdp_gather(g("wq"), ctx, 0)
+    wk = fsdp_gather(g("wk"), ctx, 0)
+    wv = fsdp_gather(g("wv"), ctx, 0)
+
+    kv_src = aux.get("cross_src") if prefix else None
+    src = kv_src if kv_src is not None else xg
+
+    q = xg @ wq
+    k = src @ wk
+    v = src @ wv
+    if cfg.qkv_bias:
+        q = q + g("bq")
+        k = k + g("bk")
+        v = v + g("bv")
+    q = q.reshape(B, S, d["Hq_loc"], dh)
+    Skv = src.shape[1]
+    k = k.reshape(B, Skv, -1, dh)
+    v = v.reshape(B, Skv, -1, dh)
+
+    if kv_src is None and cfg.rope_kind != "none":
+        q = _rope(cfg, q, aux)
+        k = _rope(cfg, k, aux)
+
+    if d["kv_rep"]:
+        # local q heads pick their kv group from the replicated full set
+        r = lax.axis_index(ctx.tp)
+        gidx = (r * d["Hq_loc"] + jnp.arange(d["Hq_loc"])) // d["group"]
+        k_use = jnp.take(k, gidx, axis=2)
+        v_use = jnp.take(v, gidx, axis=2)
+    else:
+        k_use, v_use = k, v
+
+    causal = (not ctx.is_encoder) and (kv_src is None)
+    window = cfg.window if kind == "local" else 0
+    out = common.flash_attention(
+        q, k_use, v_use, causal=causal, window=window,
+        cap=cfg.attn_softcap,
+        q_chunk=min(512, S), kv_chunk=min(512, Skv))
+
+    out = out.reshape(B, S, d["Hq_loc"] * dh)
+    wo = fsdp_gather(g("wo"), ctx, 1)
+    part = out @ wo
+    y = boundary.coded_psum_scatter(part, g("sp_out"), ctx.codec, ctx.tp,
+                                    axis=1)
+    if cfg.hnn_mode == "snn":
+        y = _maybe_snn(y, g("sp_snn"), ctx)
+    if cfg.post_norm:
+        y = common.norm(y, g("post_ln"), cfg.norm)
+
+    cache = None
+    if ctx.mode == "prefill":
+        cache = _reshard_kv_for_decode(k, v, d, ctx)
+    return x + y, cache, pen, occ
+
+
+def _reshard_kv_for_decode(k, v, d, ctx: Context):
+    """Train-layout kv (head-sharded or replicated, full seq) ->
+    decode layout (seq-sharded over cp, full heads)."""
+    n = cp_size(ctx)
+    if d["kv_rep"]:
+        # already full heads; slice local seq shard
+        idx = cp_linear_index(ctx)
+        Ss = k.shape[1] // n
+        k_s = lax.dynamic_slice_in_dim(k, idx * Ss, Ss, axis=1)
+        v_s = lax.dynamic_slice_in_dim(v, idx * Ss, Ss, axis=1)
+        return {"k": k_s, "v": v_s}
+    # heads sharded over tp: all_to_all seq<->heads over tp; if cp includes
+    # dp axes (long-context), additionally slice seq locally.
+    k2 = lax.all_to_all(k, ctx.tp, split_axis=1, concat_axis=2, tiled=True)
+    v2 = lax.all_to_all(v, ctx.tp, split_axis=1, concat_axis=2, tiled=True)
+    extra = n // ctx.tp_size if len(ctx.cp) > 1 else 1
+    if extra > 1:
+        idx = cp_linear_index(ctx) // ctx.tp_size
+        Ss = k2.shape[1] // extra
+        k2 = lax.dynamic_slice_in_dim(k2, idx * Ss, Ss, axis=1)
+        v2 = lax.dynamic_slice_in_dim(v2, idx * Ss, Ss, axis=1)
+    return {"k": k2, "v": v2}
+
+
+def mlp_fwd(p, x, ctx: Context, aux):
+    cfg = ctx.cfg
+    h = common.norm(x, p["ln2"], cfg.norm)
+    pen, occ = _stats(h, p["sp_in2"], ctx)
+    if ctx.mode == "decode":
+        # tokens replicated over tp; classic TP, psum out
+        w1 = fsdp_gather(p["w1"], ctx, 0)
+        w3 = fsdp_gather(p["w3"], ctx, 0)
+        w2 = fsdp_gather(p["w2"], ctx, 1)
+        hh = common.act_fn(h @ w1, cfg.act) * (h @ w3)
+        y = lax.psum(hh @ w2, ctx.tp)
+    else:
+        xg = boundary.coded_all_gather(h, p["sp_in2"], ctx.codec, ctx.tp,
+                                       axis=1)
+        w1 = fsdp_gather(p["w1"], ctx, 0)
+        w3 = fsdp_gather(p["w3"], ctx, 0)
+        w2 = fsdp_gather(p["w2"], ctx, 1)
+        hh = common.act_fn(xg @ w1, cfg.act) * (xg @ w3)
+        part = hh @ w2
+        y = boundary.coded_psum_scatter(part, p["sp_out2"], ctx.codec,
+                                        ctx.tp, axis=1)
+    if cfg.hnn_mode == "snn":
+        y = _maybe_snn(y, p.get("sp_snn2"), ctx)
+    if cfg.post_norm:
+        y = common.norm(y, p["post_ln2"], cfg.norm)
+    return x + y, pen, occ
+
+
+# ---------------------------------------------------------------------------
+# forward: decode (one token, context-parallel KV)
+# ---------------------------------------------------------------------------
+
+
+def attn_decode_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn",
+                    prefix=""):
+    """x [B_loc, 1, D] replicated over tp; cache {k,v} [B_loc, Ss, Hkv, dh]
+    seq-sharded over ctx.cp.  Returns (x', cache')."""
+    cfg = ctx.cfg
+    d = attn_dims(cfg, ctx.tp_size)
+    dh = d["dh"]
+    g = lambda k: p[prefix + k] if prefix else p[k]
+    B = x.shape[0]
+
+    h = common.norm(x, g("ln"), cfg.norm)
+    wq = fsdp_gather(g("wq"), ctx, 0)
+    q = h @ wq                                      # [B,1,Hq_loc*dh]
+    if cfg.qkv_bias:
+        q = q + g("bq")
+    q = q.reshape(B, 1, d["Hq_loc"], dh)
+
+    is_cross = prefix != ""
+    if not is_cross:
+        wk = fsdp_gather(g("wk"), ctx, 0)
+        wv = fsdp_gather(g("wv"), ctx, 0)
+        k_new = h @ wk
+        v_new = h @ wv
+        if cfg.qkv_bias:
+            k_new = k_new + g("bk")
+            v_new = v_new + g("bv")
+        k_new = k_new.reshape(B, 1, d["Hkv_loc"], dh)
+        v_new = v_new.reshape(B, 1, d["Hkv_loc"], dh)
+        if cfg.rope_kind != "none":
+            pos_b = jnp.broadcast_to(pos[None, None], (B, 1))
+            aux_d = dict(aux)
+            aux_d["positions"] = pos_b
+            if cfg.rope_kind == "mrope":
+                aux_d["positions3"] = jnp.broadcast_to(
+                    pos[None, None, None], (3, B, 1))
+            q = _rope(cfg, q, aux_d)
+            k_new = _rope(cfg, k_new, aux_d)
+        # full q heads / kv heads on every rank
+        if ctx.tp_size > 1:
+            q = lax.all_gather(q, ctx.tp, axis=2, tiled=True)
+        if not d["kv_rep"] and ctx.tp_size > 1:
+            k_new = lax.all_gather(k_new, ctx.tp, axis=2, tiled=True)
+            v_new = lax.all_gather(v_new, ctx.tp, axis=2, tiled=True)
+        # write into local cache shard if pos lands here
+        Ss = cache["k"].shape[1]
+        off = cp_linear_index(ctx) * Ss
+        in_range = (pos >= off) & (pos < off + Ss)
+        loc = jnp.clip(pos - off, 0, Ss - 1)
+        k_cur = lax.dynamic_slice_in_dim(cache["k"], loc, 1, axis=1)
+        v_cur = lax.dynamic_slice_in_dim(cache["v"], loc, 1, axis=1)
+        k_w = jnp.where(in_range, k_new.astype(cache["k"].dtype), k_cur)
+        v_w = jnp.where(in_range, v_new.astype(cache["v"].dtype), v_cur)
+        cache = {"k": lax.dynamic_update_slice_in_dim(cache["k"], k_w, loc, 1),
+                 "v": lax.dynamic_update_slice_in_dim(cache["v"], v_w, loc, 1)}
+    else:
+        if ctx.tp_size > 1:
+            q = lax.all_gather(q, ctx.tp, axis=2, tiled=True)
+
+    Ss = cache["k"].shape[1]
+    off = cp_linear_index(ctx) * Ss
+    window = cfg.window if kind == "local" else 0
+    eff_pos = pos if not is_cross else jnp.asarray(10 ** 9, jnp.int32)
+    o, lse = common.decode_attention_partial(
+        q[:, 0], cache["k"], cache["v"], pos=eff_pos, shard_offset=off,
+        window=window, cap=cfg.attn_softcap)
+    o = common.combine_decode_partials(o, lse, ctx.cp)
+
+    # output projection: local head slice, psum over tp
+    r = lax.axis_index(ctx.tp)
+    o_loc = lax.dynamic_slice_in_dim(o, r * d["Hq_loc"], d["Hq_loc"], axis=1)
+    wo = fsdp_gather(g("wo"), ctx, 1)
+    part = o_loc.reshape(B, 1, d["Hq_loc"] * dh).astype(x.dtype) @ wo
+    y = lax.psum(part, ctx.tp)
+    if cfg.post_norm:
+        y = common.norm(y, g("post_ln"), cfg.norm)
+    return x + y, cache

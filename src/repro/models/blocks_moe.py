@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN with expert parallelism over the tp axis.
+
+Tokens are routed locally (seq-parallel domain — MoE is token-wise, so no
+seq gather is needed), dispatched to their experts with a capacity-bound
+all_to_all, computed, and combined with a second all_to_all.  Both
+all_to_alls carry the spike wire — the paper's technique applied to the
+MoE boundary (its dispatch tensors are exactly "activations crossing
+chips").
+
+Experts that don't divide tp are padded with dummy experts whose router
+logits are masked to -inf (qwen2-moe: 60 -> 64).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import boundary
+from . import common
+from .context import Context, fsdp_gather
+from .params import pdef, spike_pdefs
+
+
+def moe_dims(cfg, tp):
+    E = cfg.padded(cfg.n_experts, tp)
+    return dict(E=E, E_loc=E // tp, Fe=cfg.d_ff_expert,
+                n_real=cfg.n_experts,
+                Fs=cfg.n_shared_experts * cfg.d_ff_expert)
+
+
+def moe_defs(cfg, tp):
+    d = moe_dims(cfg, tp)
+    D = cfg.d_model
+    defs = {
+        "ln2": pdef(D, init="zeros"),
+        "wr": pdef(D, d["E"], init="normal", scale=0.02,
+                   dtype=jnp.float32),
+        "we1": pdef(d["E"], D, d["Fe"], tp=0, fsdp=1),
+        "we3": pdef(d["E"], D, d["Fe"], tp=0, fsdp=1),
+        "we2": pdef(d["E"], d["Fe"], D, tp=0, fsdp=1),
+        "sp_disp": spike_pdefs(D),
+        "sp_comb": spike_pdefs(D),
+    }
+    if d["Fs"]:
+        defs["ws1"] = pdef(D, d["Fs"], fsdp=0)
+        defs["ws3"] = pdef(D, d["Fs"], fsdp=0)
+        defs["ws2"] = pdef(d["Fs"], D, fsdp=1)
+    if cfg.hnn_mode == "snn":
+        defs["sp_snn2"] = spike_pdefs(D)
+    return defs
+
+
+def _route(cfg, d, h2, wr):
+    """h2 [T, D] -> (gates [T,k], idx [T,k], aux_loss)."""
+    T = h2.shape[0]
+    k = cfg.top_k
+    logits = (h2.astype(jnp.float32) @ wr.astype(jnp.float32))
+    emask = jnp.arange(d["E"]) < d["n_real"]
+    logits = jnp.where(emask[None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(probs, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], d["E"]), axis=0)
+    aux = d["n_real"] * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def moe_fwd(p, x, ctx: Context, aux_in):
+    """x [B_loc, S_loc, D] (or [B,1,D] decode) -> (x', penalty, occ)."""
+    cfg = ctx.cfg
+    d = moe_dims(cfg, ctx.tp_size)
+    B, S_loc, D = x.shape
+    T = B * S_loc
+    k = cfg.top_k
+
+    h = common.norm(x, p["ln2"], cfg.norm)
+    h2 = h.reshape(T, D)
+    pen, occ = _stats(h2, p["sp_disp"], ctx)
+
+    gates, idx, auxl = _route(cfg, d, h2, p["wr"])
+
+    # capacity (tokens per expert per device); decode batches are tiny so
+    # use a generous factor to avoid drops
+    cf = cfg.capacity_factor if ctx.mode == "train" else 4.0
+    C = max(1, math.ceil(T * k / d["E"] * cf))
+    # rank of each assignment within its expert
+    onehot = jax.nn.one_hot(idx, d["E"], dtype=jnp.int32)   # [T,k,E]
+    flat = onehot.reshape(T * k, d["E"])
+    ranks = jnp.cumsum(flat, axis=0) - flat
+    rank = jnp.sum(ranks * flat, axis=-1)                    # [T*k]
+    e_fl = idx.reshape(-1)
+    keep = (rank < C)
+    r_fl = jnp.clip(rank, 0, C - 1)
+    tok_fl = jnp.repeat(jnp.arange(T), k)
+
+    # dispatch buffer [E, C, D]
+    buf = jnp.zeros((d["E"], C, D), h2.dtype)
+    contrib = h2[tok_fl] * keep[:, None].astype(h2.dtype)
+    buf = buf.at[e_fl, r_fl].add(contrib)
+
+    # ---- boundary: EP all_to_all (spike wire) -> [E_loc, tp*C, D]
+    if ctx.tp_size > 1:
+        xb = boundary.coded_all_to_all(buf, p["sp_disp"], ctx.codec, ctx.tp,
+                                       split_axis=0, concat_axis=1)
+    else:
+        xb = buf
+
+    we1 = fsdp_gather(p["we1"], ctx, 1)
+    we3 = fsdp_gather(p["we3"], ctx, 1)
+    we2 = fsdp_gather(p["we2"], ctx, 1)
+    hh = common.act_fn(jnp.einsum("ecd,edf->ecf", xb, we1), cfg.act) \
+        * jnp.einsum("ecd,edf->ecf", xb, we3)
+    yb = jnp.einsum("ecf,efd->ecd", hh, we2)
+
+    # ---- boundary: combine all_to_all (spike wire) -> [E, C, D]
+    if ctx.tp_size > 1:
+        yb = boundary.coded_all_to_all(yb, p["sp_comb"], ctx.codec, ctx.tp,
+                                       split_axis=1, concat_axis=0)
+
+    # combine back to tokens
+    y_fl = yb.reshape(d["E"] * C, D)[e_fl * C + r_fl]
+    y_fl = y_fl * (gates.reshape(-1, 1) * keep[:, None]).astype(y_fl.dtype)
+    y = jnp.zeros((T, D), y_fl.dtype).at[tok_fl].add(y_fl)
+
+    # shared experts: fully-local dense gated MLP (no collective)
+    if d["Fs"]:
+        ws1 = fsdp_gather(p["ws1"], ctx, 0)
+        ws3 = fsdp_gather(p["ws3"], ctx, 0)
+        ws2 = fsdp_gather(p["ws2"], ctx, 1)
+        y = y + (common.act_fn(h2 @ ws1, cfg.act) * (h2 @ ws3)) @ ws2
+
+    y = y.reshape(B, S_loc, D)
+    if cfg.hnn_mode == "snn":
+        from .blocks_attn import _maybe_snn
+        y = _maybe_snn(y, p.get("sp_snn2"), ctx)
+    pen = pen + 0.01 * auxl.astype(jnp.float32)
+    return x + y, pen, occ
+
+
+def _stats(h, p, ctx):
+    if ctx.mode == "train" and ctx.collect_stats:
+        pen, occ = boundary.boundary_penalty(h, p, ctx.codec)
+        return pen.astype(jnp.float32), occ.astype(jnp.float32)
+    z = jnp.zeros((), jnp.float32)
+    return z, z

@@ -1,0 +1,492 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and RWKV (the paper's LM).
+
+xLSTM blocks are self-contained (d_ff = 0): the mixer includes its own
+up/down projections.  Heads are TP-sharded; seq gather in / partial-sum
+scatter out are the spike boundaries, as elsewhere.
+
+Recurrences run as lax.scan over seq chunks with a jax.checkpoint'd chunk
+body, so the backward pass stores only chunk-boundary states (the
+standard linear-RNN memory trick) — important for the mLSTM matrix state
+[B, H, dh, dh].
+
+RWKV follows the paper's benchmark model (RWKV-4-style time-mix +
+channel-mix with the numerically-stable wkv recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import boundary
+from . import common
+from .context import Context, fsdp_gather
+from .params import pdef, spike_pdefs
+
+F32 = jnp.float32
+
+
+def _stats(h, p, ctx):
+    if ctx.mode == "train" and ctx.collect_stats:
+        pen, occ = boundary.boundary_penalty(h, p, ctx.codec)
+        return pen.astype(jnp.float32), occ.astype(jnp.float32)
+    z = jnp.zeros((), jnp.float32)
+    return z, z
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory block)
+# ===========================================================================
+
+
+def mlstm_dims(cfg, tp):
+    H = cfg.padded(cfg.n_heads, tp)
+    dh = cfg.d_model // cfg.n_heads
+    return dict(H=H, H_loc=H // tp, dh=dh)
+
+
+def mlstm_defs(cfg, tp):
+    d = mlstm_dims(cfg, tp)
+    D, dh = cfg.d_model, d["dh"]
+    return {
+        "ln": pdef(D, init="zeros"),
+        "wq": pdef(D, d["H"] * dh, tp=1, fsdp=0),
+        "wk": pdef(D, d["H"] * dh, tp=1, fsdp=0),
+        "wv": pdef(D, d["H"] * dh, tp=1, fsdp=0),
+        # [D, 2, H] with tp on the head dim so each rank owns (i,f) for
+        # its heads (sharding a concatenated 2H dim would interleave gates)
+        "wif": pdef(D, 2, d["H"], tp=2, scale=0.05),    # i,f gate logits
+        "wg": pdef(D, d["H"] * dh, tp=1, fsdp=0),       # output gate
+        "wo": pdef(d["H"] * dh, D, tp=0, fsdp=1),
+        "sp_in": spike_pdefs(D),
+        "sp_out": spike_pdefs(D),
+    }
+
+
+def mlstm_cache_defs(cfg, tp, B_loc, dtype):
+    d = mlstm_dims(cfg, tp)
+    return {
+        "C": jax.ShapeDtypeStruct((B_loc, d["H_loc"], d["dh"], d["dh"]), F32),
+        "n": jax.ShapeDtypeStruct((B_loc, d["H_loc"], d["dh"]), F32),
+        "m": jax.ShapeDtypeStruct((B_loc, d["H_loc"]), F32),
+    }
+
+
+def _mlstm_cell(state, qkvif):
+    """One stabilized mLSTM step (xLSTM paper eqs 19-27)."""
+    C, n, m = state
+    q, k, v, ig, fg = qkvif                          # [B,H,dh]x3, [B,H]x2
+    m_new = jnp.maximum(fg + m, ig)
+    f_eff = jnp.exp(fg + m - m_new)
+    i_eff = jnp.exp(ig - m_new)
+    C_new = f_eff[..., None, None] * C + \
+        i_eff[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n_new = f_eff[..., None] * n + i_eff[..., None] * k
+    num = jnp.einsum("bhij,bhi->bhj", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n_new, q)), 1.0)
+    h = num / den[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def _mlstm_scan(q, k, v, ig, fg, state, chunk=64):
+    """q,k,v [B,S,H,dh]; ig,fg [B,S,H].  Returns (h [B,S,H,dh], state)."""
+    B, S, H, dh = q.shape
+    ch = min(chunk, S)
+    nc = S // ch
+
+    def chunk_body(state, blk):
+        qs, ks, vs, igs, fgs = blk                   # [ch, B, H, ...]
+
+        def step(st, t):
+            return _mlstm_cell(st, (qs[t], ks[t], vs[t], igs[t], fgs[t]))
+
+        st, hs = lax.scan(step, state, jnp.arange(ch))
+        return st, hs
+
+    blks = (q.transpose(1, 0, 2, 3).reshape(nc, ch, B, H, dh),
+            k.transpose(1, 0, 2, 3).reshape(nc, ch, B, H, dh),
+            v.transpose(1, 0, 2, 3).reshape(nc, ch, B, H, dh),
+            ig.transpose(1, 0, 2).reshape(nc, ch, B, H),
+            fg.transpose(1, 0, 2).reshape(nc, ch, B, H))
+    state, hs = lax.scan(jax.checkpoint(chunk_body), state, blks)
+    h = hs.reshape(S, B, H, dh).transpose(1, 0, 2, 3)
+    return h, state
+
+
+def mlstm_fwd(p, x, ctx: Context, aux):
+    cfg = ctx.cfg
+    d = mlstm_dims(cfg, ctx.tp_size)
+    h_in = common.norm(x, p["ln"], cfg.norm)
+    pen, occ = _stats(h_in, p["sp_in"], ctx)
+    xg = boundary.coded_all_gather(h_in, p["sp_in"], ctx.codec, ctx.tp,
+                                   axis=1)
+    B, S, D = xg.shape
+    dh = d["dh"]
+
+    wq = fsdp_gather(p["wq"], ctx, 0)
+    wk = fsdp_gather(p["wk"], ctx, 0)
+    wv = fsdp_gather(p["wv"], ctx, 0)
+    wg = fsdp_gather(p["wg"], ctx, 0)
+    q = (xg @ wq).reshape(B, S, d["H_loc"], dh).astype(F32)
+    k = (xg @ wk).reshape(B, S, d["H_loc"], dh).astype(F32) / (dh ** 0.5)
+    v = (xg @ wv).reshape(B, S, d["H_loc"], dh).astype(F32)
+    gif = jnp.einsum("bsd,dgh->bsgh", xg.astype(F32),
+                     p["wif"].astype(F32))            # [B,S,2,H_loc]
+    ig = gif[:, :, 0]
+    fg = jax.nn.log_sigmoid(gif[:, :, 1])
+
+    state = (jnp.zeros((B, d["H_loc"], dh, dh), F32),
+             jnp.zeros((B, d["H_loc"], dh), F32),
+             jnp.zeros((B, d["H_loc"]), F32))
+    hseq, state = _mlstm_scan(q, k, v, ig, fg, state)
+    og = jax.nn.sigmoid((xg @ wg).astype(F32)).reshape(B, S, d["H_loc"], dh)
+    y = (hseq * og).reshape(B, S, d["H_loc"] * dh).astype(x.dtype)
+
+    wo = fsdp_gather(p["wo"], ctx, 1)
+    part = y @ wo
+    out = boundary.coded_psum_scatter(part, p["sp_out"], ctx.codec, ctx.tp,
+                                      axis=1)
+    cache = None
+    if ctx.mode == "prefill":
+        cache = {"C": state[0], "n": state[1], "m": state[2]}
+    return x + out, cache, pen, occ
+
+
+def mlstm_decode_fwd(p, x, cache, pos, ctx: Context, aux):
+    cfg = ctx.cfg
+    d = mlstm_dims(cfg, ctx.tp_size)
+    B = x.shape[0]
+    dh = d["dh"]
+    h_in = common.norm(x, p["ln"], cfg.norm)[:, 0]
+
+    wq = fsdp_gather(p["wq"], ctx, 0)
+    wk = fsdp_gather(p["wk"], ctx, 0)
+    wv = fsdp_gather(p["wv"], ctx, 0)
+    wg = fsdp_gather(p["wg"], ctx, 0)
+    q = (h_in @ wq).reshape(B, d["H_loc"], dh).astype(F32)
+    k = (h_in @ wk).reshape(B, d["H_loc"], dh).astype(F32) / (dh ** 0.5)
+    v = (h_in @ wv).reshape(B, d["H_loc"], dh).astype(F32)
+    gif = jnp.einsum("bd,dgh->bgh", h_in.astype(F32),
+                     p["wif"].astype(F32))            # [B,2,H_loc]
+    ig = gif[:, 0]
+    fg = jax.nn.log_sigmoid(gif[:, 1])
+
+    state = (cache["C"], cache["n"], cache["m"])
+    state, h = _mlstm_cell(state, (q, k, v, ig, fg))
+    og = jax.nn.sigmoid((h_in @ wg).astype(F32)).reshape(B, d["H_loc"], dh)
+    y = (h * og).reshape(B, 1, d["H_loc"] * dh).astype(x.dtype)
+    wo = fsdp_gather(p["wo"], ctx, 1)
+    out = lax.psum(y @ wo, ctx.tp)
+    return x + out, {"C": state[0], "n": state[1], "m": state[2]}
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar-memory block, block-diagonal recurrence)
+# ===========================================================================
+
+
+def slstm_defs(cfg, tp):
+    d = mlstm_dims(cfg, tp)
+    D, dh = cfg.d_model, d["dh"]
+    return {
+        "ln": pdef(D, init="zeros"),
+        "wz": pdef(D, d["H"] * dh, tp=1, fsdp=0),
+        # [D, 3, H*dh] with tp on the last dim (see mlstm wif note)
+        "wgates": pdef(D, 3, d["H"] * dh, tp=2, fsdp=0),    # i,f,o
+        "r": pdef(d["H"], dh, 4 * dh, tp=0, scale=0.05),    # recurrent (z,i,f,o)
+        "wo": pdef(d["H"] * dh, D, tp=0, fsdp=1),
+        "sp_in": spike_pdefs(D),
+        "sp_out": spike_pdefs(D),
+    }
+
+
+def slstm_cache_defs(cfg, tp, B_loc, dtype):
+    d = mlstm_dims(cfg, tp)
+    shape = (B_loc, d["H_loc"], d["dh"])
+    return {k: jax.ShapeDtypeStruct(shape, F32) for k in ("c", "n", "h", "m")}
+
+
+def _slstm_cell(state, zifo, r):
+    """Stabilized sLSTM step; r [H, dh, 4dh] block-diag recurrence."""
+    c, n, h, m = state                              # [B,H,dh]
+    rec = jnp.einsum("bhi,hij->bhj", h, r)          # [B,H,4dh]
+    dh = c.shape[-1]
+    z_r, i_r, f_r, o_r = jnp.split(rec, 4, axis=-1)
+    z_x, i_x, f_x, o_x = zifo
+    z = jnp.tanh(z_x + z_r)
+    i_t = i_x + i_r
+    f_t = jax.nn.log_sigmoid(f_x + f_r)
+    o = jax.nn.sigmoid(o_x + o_r)
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_eff = jnp.exp(i_t - m_new)
+    f_eff = jnp.exp(f_t + m - m_new)
+    c_new = f_eff * c + i_eff * z
+    n_new = f_eff * n + i_eff
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def _slstm_scan(zx, ix, fx, ox, r, state, chunk=64):
+    B, S, H, dh = zx.shape
+    ch = min(chunk, S)
+    nc = S // ch
+
+    def chunk_body(state, blk):
+        zs, is_, fs, os_ = blk
+
+        def step(st, t):
+            return _slstm_cell(st, (zs[t], is_[t], fs[t], os_[t]), r)
+
+        return lax.scan(step, state, jnp.arange(ch))
+
+    mk = lambda a: a.transpose(1, 0, 2, 3).reshape(nc, ch, B, H, dh)
+    state, hs = lax.scan(jax.checkpoint(chunk_body), state,
+                         (mk(zx), mk(ix), mk(fx), mk(ox)))
+    return hs.reshape(S, B, H, dh).transpose(1, 0, 2, 3), state
+
+
+def slstm_fwd(p, x, ctx: Context, aux):
+    cfg = ctx.cfg
+    d = mlstm_dims(cfg, ctx.tp_size)
+    dh = d["dh"]
+    h_in = common.norm(x, p["ln"], cfg.norm)
+    pen, occ = _stats(h_in, p["sp_in"], ctx)
+    xg = boundary.coded_all_gather(h_in, p["sp_in"], ctx.codec, ctx.tp,
+                                   axis=1)
+    B, S, D = xg.shape
+
+    wz = fsdp_gather(p["wz"], ctx, 0)
+    wg = fsdp_gather(p["wgates"], ctx, 0)
+    zx = (xg @ wz).reshape(B, S, d["H_loc"], dh).astype(F32)
+    gx = jnp.einsum("bsd,dgk->bsgk", xg.astype(F32), wg.astype(F32))
+    gx = gx.reshape(B, S, 3, d["H_loc"], dh)
+    ix, fx, ox = gx[:, :, 0], gx[:, :, 1], gx[:, :, 2]
+
+    state = tuple(jnp.zeros((B, d["H_loc"], dh), F32) for _ in range(4))
+    hseq, state = _slstm_scan(zx, ix, fx, ox, p["r"].astype(F32), state)
+    y = hseq.reshape(B, S, d["H_loc"] * dh).astype(x.dtype)
+
+    wo = fsdp_gather(p["wo"], ctx, 1)
+    part = y @ wo
+    out = boundary.coded_psum_scatter(part, p["sp_out"], ctx.codec, ctx.tp,
+                                      axis=1)
+    cache = None
+    if ctx.mode == "prefill":
+        cache = dict(zip(("c", "n", "h", "m"), state))
+    return x + out, cache, pen, occ
+
+
+def slstm_decode_fwd(p, x, cache, pos, ctx: Context, aux):
+    cfg = ctx.cfg
+    d = mlstm_dims(cfg, ctx.tp_size)
+    dh = d["dh"]
+    B = x.shape[0]
+    h_in = common.norm(x, p["ln"], cfg.norm)[:, 0]
+    wz = fsdp_gather(p["wz"], ctx, 0)
+    wg = fsdp_gather(p["wgates"], ctx, 0)
+    zx = (h_in @ wz).reshape(B, d["H_loc"], dh).astype(F32)
+    gx = jnp.einsum("bd,dgk->bgk", h_in.astype(F32), wg.astype(F32))
+    gx = gx.reshape(B, 3, d["H_loc"], dh)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    state, h = _slstm_cell(state, (zx, gx[:, 0], gx[:, 1], gx[:, 2]),
+                           p["r"].astype(F32))
+    y = h.reshape(B, 1, d["H_loc"] * dh).astype(x.dtype)
+    wo = fsdp_gather(p["wo"], ctx, 1)
+    out = lax.psum(y @ wo, ctx.tp)
+    return x + out, dict(zip(("c", "n", "h", "m"), state))
+
+
+# ===========================================================================
+# RWKV (paper's language model; RWKV-4-style)
+# ===========================================================================
+
+
+def rwkv_dims(cfg, tp):
+    C = cfg.padded(cfg.d_model, tp)
+    return dict(C=C, C_loc=C // tp)
+
+
+def rwkv_defs(cfg, tp):
+    d = rwkv_dims(cfg, tp)
+    D = cfg.d_model
+    F = cfg.ff_padded(tp) or 4 * D
+    return {
+        "ln1": pdef(D, init="zeros"),
+        "ln2": pdef(D, init="zeros"),
+        "mix_kvr": pdef(3, D, init="half", dtype=jnp.float32),
+        "mix_cm": pdef(2, D, init="half", dtype=jnp.float32),
+        "time_decay": pdef(d["C"], tp=0, init="zeros", dtype=jnp.float32),
+        "time_first": pdef(d["C"], tp=0, init="zeros", dtype=jnp.float32),
+        "wk_tm": pdef(D, d["C"], tp=1, fsdp=0),
+        "wv_tm": pdef(D, d["C"], tp=1, fsdp=0),
+        "wr_tm": pdef(D, d["C"], tp=1, fsdp=0),
+        "wo_tm": pdef(d["C"], D, tp=0, fsdp=1),
+        "wk_cm": pdef(D, F, tp=1, fsdp=0),
+        "wr_cm": pdef(D, D, fsdp=0),
+        "wv_cm": pdef(F, D, tp=0, fsdp=1),
+        "sp_in": spike_pdefs(D),
+        "sp_out": spike_pdefs(D),
+        "sp_in2": spike_pdefs(D),
+        "sp_out2": spike_pdefs(D),
+    }
+
+
+def rwkv_cache_defs(cfg, tp, B_loc, dtype):
+    d = rwkv_dims(cfg, tp)
+    D = cfg.d_model
+    return {
+        "x_tm": jax.ShapeDtypeStruct((B_loc, D), dtype),
+        "x_cm": jax.ShapeDtypeStruct((B_loc, D), dtype),
+        "aa": jax.ShapeDtypeStruct((B_loc, d["C_loc"]), F32),
+        "bb": jax.ShapeDtypeStruct((B_loc, d["C_loc"]), F32),
+        "pp": jax.ShapeDtypeStruct((B_loc, d["C_loc"]), F32),
+    }
+
+
+def _wkv_step(state, kvu):
+    """Numerically-stable RWKV wkv recurrence (one step)."""
+    aa, bb, pp = state
+    kt, vt, w, u = kvu
+    ww = u + kt
+    q = jnp.maximum(pp, ww)
+    e1 = jnp.exp(pp - q)
+    e2 = jnp.exp(ww - q)
+    out = (e1 * aa + e2 * vt) / jnp.maximum(e1 * bb + e2, 1e-30)
+    ww2 = pp + w
+    q2 = jnp.maximum(ww2, kt)
+    e1b = jnp.exp(ww2 - q2)
+    e2b = jnp.exp(kt - q2)
+    return (e1b * aa + e2b * vt, e1b * bb + e2b, q2), out
+
+
+def _wkv_scan(k, v, w, u, state, chunk=64):
+    """k,v [B,S,C]; w,u [C]."""
+    B, S, C = k.shape
+    ch = min(chunk, S)
+    nc = S // ch
+
+    def chunk_body(state, blk):
+        ks, vs = blk
+
+        def step(st, t):
+            return _wkv_step(st, (ks[t], vs[t], w, u))
+
+        return lax.scan(step, state, jnp.arange(ch))
+
+    mk = lambda a: a.transpose(1, 0, 2).reshape(nc, ch, B, C)
+    state, outs = lax.scan(jax.checkpoint(chunk_body), state, (mk(k), mk(v)))
+    return outs.reshape(S, B, C).transpose(1, 0, 2), state
+
+
+def _token_shift(xg, x_prev):
+    """x_{t-1} stream: shift right by one, x_prev fills position 0."""
+    return jnp.concatenate([x_prev[:, None, :], xg[:, :-1, :]], axis=1)
+
+
+def rwkv_fwd(p, x, ctx: Context, aux):
+    cfg = ctx.cfg
+    d = rwkv_dims(cfg, ctx.tp_size)
+    B, S_loc, D = x.shape
+
+    # ---- time-mix ----
+    h = common.norm(x, p["ln1"], cfg.norm)
+    pen, occ = _stats(h, p["sp_in"], ctx)
+    xg = boundary.coded_all_gather(h, p["sp_in"], ctx.codec, ctx.tp, axis=1)
+    B, S, D = xg.shape
+    xp = _token_shift(xg, jnp.zeros((B, D), xg.dtype))
+    mk, mv, mr = p["mix_kvr"][0], p["mix_kvr"][1], p["mix_kvr"][2]
+    mix = lambda m: (xg.astype(F32) * m + xp.astype(F32) * (1 - m)).astype(xg.dtype)
+    wk = fsdp_gather(p["wk_tm"], ctx, 0)
+    wv = fsdp_gather(p["wv_tm"], ctx, 0)
+    wr = fsdp_gather(p["wr_tm"], ctx, 0)
+    kt = (mix(mk) @ wk).astype(F32)
+    vt = (mix(mv) @ wv).astype(F32)
+    rt = jax.nn.sigmoid((mix(mr) @ wr).astype(F32))
+    w = -jnp.exp(p["time_decay"])
+    u = p["time_first"]
+    state = (jnp.zeros((B, d["C_loc"]), F32), jnp.zeros((B, d["C_loc"]), F32),
+             jnp.full((B, d["C_loc"]), -1e30, F32))
+    wkv, state = _wkv_scan(kt, vt, w, u, state)
+    y = (rt * wkv).astype(x.dtype)
+    wo = fsdp_gather(p["wo_tm"], ctx, 1)
+    part = y @ wo
+    out1 = boundary.coded_psum_scatter(part, p["sp_out"], ctx.codec, ctx.tp,
+                                       axis=1)
+    if cfg.hnn_mode == "snn" and ctx.codec.mode != "none":
+        out1 = boundary._local_roundtrip(out1, p["sp_out"], ctx.codec)
+    x = x + out1
+
+    # ---- channel-mix ----
+    h2 = common.norm(x, p["ln2"], cfg.norm)
+    pen2, occ2 = _stats(h2, p["sp_in2"], ctx)
+    xg2 = boundary.coded_all_gather(h2, p["sp_in2"], ctx.codec, ctx.tp,
+                                    axis=1)
+    xp2 = _token_shift(xg2, jnp.zeros((B, D), xg2.dtype))
+    mk2, mr2 = p["mix_cm"][0], p["mix_cm"][1]
+    mix2 = lambda m: (xg2.astype(F32) * m + xp2.astype(F32) * (1 - m)).astype(xg2.dtype)
+    wk2 = fsdp_gather(p["wk_cm"], ctx, 0)
+    wr2 = fsdp_gather(p["wr_cm"], ctx, 0)
+    wv2 = fsdp_gather(p["wv_cm"], ctx, 1)
+    kk = jnp.square(jax.nn.relu(mix2(mk2) @ wk2))
+    rr = jax.nn.sigmoid((mix2(mr2) @ wr2).astype(F32)).astype(x.dtype)
+    part2 = kk @ wv2
+    out2 = boundary.coded_psum_scatter(part2, p["sp_out2"], ctx.codec,
+                                       ctx.tp, axis=1)
+    # apply receptance gate in the sharded domain
+    rr_loc = _shard_slice_seq(rr, ctx, S_loc)
+    if cfg.hnn_mode == "snn" and ctx.codec.mode != "none":
+        out2 = boundary._local_roundtrip(out2, p["sp_out2"], ctx.codec)
+    x = x + rr_loc * out2
+    cache = None
+    if ctx.mode == "prefill":
+        cache = {"x_tm": xg[:, -1].astype(x.dtype),
+                 "x_cm": xg2[:, -1].astype(x.dtype),
+                 "aa": state[0], "bb": state[1], "pp": state[2]}
+    return x, cache, pen + pen2, occ * 0.5 + occ2 * 0.5
+
+
+def _shard_slice_seq(full, ctx, S_loc):
+    r = lax.axis_index(ctx.tp)
+    return lax.dynamic_slice_in_dim(full, r * S_loc, S_loc, axis=1)
+
+
+def rwkv_decode_fwd(p, x, cache, pos, ctx: Context, aux):
+    cfg = ctx.cfg
+    d = rwkv_dims(cfg, ctx.tp_size)
+    B = x.shape[0]
+
+    h = common.norm(x, p["ln1"], cfg.norm)[:, 0]
+    xp = cache["x_tm"].astype(F32)
+    mk, mv, mr = p["mix_kvr"][0], p["mix_kvr"][1], p["mix_kvr"][2]
+    mix = lambda m: (h.astype(F32) * m + xp * (1 - m)).astype(h.dtype)
+    wk = fsdp_gather(p["wk_tm"], ctx, 0)
+    wv = fsdp_gather(p["wv_tm"], ctx, 0)
+    wr = fsdp_gather(p["wr_tm"], ctx, 0)
+    kt = (mix(mk) @ wk).astype(F32)
+    vt = (mix(mv) @ wv).astype(F32)
+    rt = jax.nn.sigmoid((mix(mr) @ wr).astype(F32))
+    w = -jnp.exp(p["time_decay"])
+    u = p["time_first"]
+    state = (cache["aa"], cache["bb"], cache["pp"])
+    state, wkv = _wkv_step(state, (kt, vt, w, u))
+    y = (rt * wkv)[:, None, :].astype(x.dtype)
+    wo = fsdp_gather(p["wo_tm"], ctx, 1)
+    x = x + lax.psum(y @ wo, ctx.tp)
+
+    h2 = common.norm(x, p["ln2"], cfg.norm)[:, 0]
+    xp2 = cache["x_cm"].astype(F32)
+    mk2, mr2 = p["mix_cm"][0], p["mix_cm"][1]
+    mix2 = lambda m: (h2.astype(F32) * m + xp2 * (1 - m)).astype(h2.dtype)
+    wk2 = fsdp_gather(p["wk_cm"], ctx, 0)
+    wr2 = fsdp_gather(p["wr_cm"], ctx, 0)
+    wv2 = fsdp_gather(p["wv_cm"], ctx, 1)
+    kk = jnp.square(jax.nn.relu(mix2(mk2) @ wk2))
+    rr = jax.nn.sigmoid((mix2(mr2) @ wr2).astype(F32)).astype(x.dtype)
+    y2 = rr[:, None, :] * lax.psum((kk @ wv2)[:, None, :], ctx.tp)
+    x = x + y2
+    new_cache = {"x_tm": h.astype(cache["x_tm"].dtype),
+                 "x_cm": h2.astype(cache["x_cm"].dtype),
+                 "aa": state[0], "bb": state[1], "pp": state[2]}
+    return x, new_cache

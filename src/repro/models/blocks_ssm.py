@@ -1,0 +1,201 @@
+"""Mamba (selective SSM) mixer block — jamba's dominant layer type.
+
+TP shards the inner dim d_inner over the model axis; the seq gather /
+partial-sum scatter around the block are the spike boundaries (same
+pattern as attention).  The selective scan runs chunked: lax.scan over
+seq chunks carrying the SSM state, with an associative scan inside each
+chunk — decay/drive tensors [B, chunk, Di_loc, N] are materialized one
+chunk at a time so 32k prefill stays in memory.
+
+Decode is a single state update (O(1) in sequence length — this is why
+jamba runs the long_500k cell).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import boundary
+from . import common
+from .context import Context, fsdp_gather
+from .params import pdef, spike_pdefs
+
+F32 = jnp.float32
+
+
+def ssm_dims(cfg, tp):
+    Di = cfg.inner_padded(tp)
+    return dict(Di=Di, Di_loc=Di // tp, N=cfg.d_state, R=cfg.dt_rank_eff,
+                K=cfg.d_conv)
+
+
+def mamba_defs(cfg, tp):
+    d = ssm_dims(cfg, tp)
+    D = cfg.d_model
+    return {
+        "ln": pdef(D, init="zeros"),
+        "wi": pdef(D, 2 * d["Di"], tp=1, fsdp=0),        # x, z
+        "conv_w": pdef(d["Di"], d["K"], tp=0, scale=0.1),
+        "wb": pdef(D, d["N"], scale=0.05),               # B proj (replicated)
+        "wc": pdef(D, d["N"], scale=0.05),               # C proj (replicated)
+        "wdt1": pdef(D, d["R"], scale=0.05),
+        "wdt2": pdef(d["R"], d["Di"], tp=1, scale=0.1),
+        "dt_bias": pdef(d["Di"], tp=0, init="dtbias", dtype=jnp.float32),
+        "a_log": pdef(d["Di"], d["N"], tp=0, init="alog", dtype=jnp.float32),
+        "d_skip": pdef(d["Di"], tp=0, init="ones", dtype=jnp.float32),
+        "wo": pdef(d["Di"], D, tp=0, fsdp=1),
+        "sp_in": spike_pdefs(D),
+        "sp_out": spike_pdefs(D),
+    }
+
+
+def mamba_cache_defs(cfg, tp, B_loc, dtype):
+    d = ssm_dims(cfg, tp)
+    return {
+        "conv": jax.ShapeDtypeStruct((B_loc, d["K"] - 1, d["Di_loc"]), dtype),
+        "ssm": jax.ShapeDtypeStruct((B_loc, d["Di_loc"], d["N"]), F32),
+    }
+
+
+def _causal_conv(x, w):
+    """x [B, S, Ci]; w [Ci, K] depthwise causal."""
+    B, S, Ci = x.shape
+    K = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    rhs = w.astype(F32).T[:, None, :]                # [K, I=1, O=Ci]
+    out = lax.conv_general_dilated(
+        xp.astype(F32), rhs,
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=Ci)
+    return out.astype(x.dtype)
+
+
+def _chunked_selective_scan(x_in, dt, Bm, Cm, A, h0, chunk=256):
+    """x_in, dt [B,S,Di]; Bm, Cm [B,S,N]; A [Di,N]; h0 [B,Di,N].
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t
+    Returns (y [B,S,Di], h_final).
+    """
+    B, S, Di = x_in.shape
+    N = A.shape[1]
+    ch = min(chunk, S)
+    nc = S // ch
+    assert S % ch == 0
+
+    xr = x_in.reshape(B, nc, ch, Di)
+    dtr = dt.reshape(B, nc, ch, Di)
+    Br = Bm.reshape(B, nc, ch, N)
+    Cr = Cm.reshape(B, nc, ch, N)
+
+    def step(h, blk):
+        xb, dtb, bb, cb = blk                      # [B,ch,...]
+        decay = jnp.exp(dtb[..., None] * A[None, None])        # [B,ch,Di,N]
+        drive = (dtb * xb)[..., None] * bb[:, :, None, :]      # [B,ch,Di,N]
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        a_cum, b_cum = lax.associative_scan(comb, (decay, drive), axis=1)
+        h_t = a_cum * h[:, None] + b_cum                       # [B,ch,Di,N]
+        y = jnp.einsum("bcdn,bcn->bcd", h_t, cb)
+        return h_t[:, -1], y
+
+    # remat each chunk: saves only the [B, Di, N] carry per chunk instead
+    # of the [B, ch, Di, N] decay/drive residual stack
+    step = jax.checkpoint(step, prevent_cse=False)
+    h_fin, ys = lax.scan(
+        step, h0,
+        (xr.transpose(1, 0, 2, 3), dtr.transpose(1, 0, 2, 3),
+         Br.transpose(1, 0, 2, 3), Cr.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, Di)
+    return y, h_fin
+
+
+def mamba_fwd(p, x, ctx: Context, aux):
+    """Train/prefill.  x [B_loc, S_loc, D] -> (x', cache|None, pen, occ)."""
+    cfg = ctx.cfg
+    d = ssm_dims(cfg, ctx.tp_size)
+    h = common.norm(x, p["ln"], cfg.norm)
+    pen, occ = _stats(h, p["sp_in"], ctx)
+    xg = boundary.coded_all_gather(h, p["sp_in"], ctx.codec, ctx.tp, axis=1)
+    B, S, D = xg.shape
+
+    wi = fsdp_gather(p["wi"], ctx, 0)
+    xz = xg @ wi
+    x_in, z = jnp.split(xz, 2, axis=-1)            # [B,S,Di_loc]
+    x_in = common.act_fn(_causal_conv(x_in, p["conv_w"]), "silu")
+
+    Bm = (xg.astype(F32) @ p["wb"].astype(F32))
+    Cm = (xg.astype(F32) @ p["wc"].astype(F32))
+    dtr = xg @ p["wdt1"].astype(xg.dtype)
+    wdt2 = p["wdt2"]
+    dt = jax.nn.softplus(dtr.astype(F32) @ wdt2.astype(F32)
+                         + p["dt_bias"][None, None])
+    A = -jnp.exp(p["a_log"])
+
+    y, h_fin = _chunked_selective_scan(
+        x_in.astype(F32), dt, Bm, Cm, A,
+        jnp.zeros((B, d["Di_loc"], d["N"]), F32))
+    y = y + p["d_skip"][None, None] * x_in.astype(F32)
+    y = (y * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+
+    wo = fsdp_gather(p["wo"], ctx, 1)
+    part = y @ wo
+    out = boundary.coded_psum_scatter(part, p["sp_out"], ctx.codec, ctx.tp,
+                                      axis=1)
+    cache = None
+    if ctx.mode == "prefill":
+        cache = {"conv": x_in[:, S - (d["K"] - 1):, :].astype(x.dtype),
+                 "ssm": h_fin}
+    return x + out, cache, pen, occ
+
+
+def mamba_decode_fwd(p, x, cache, pos, ctx: Context, aux):
+    """One-step state update.  x [B,1,D] replicated over tp; inner dims
+    sharded over tp (state shard per rank)."""
+    cfg = ctx.cfg
+    d = ssm_dims(cfg, ctx.tp_size)
+    B = x.shape[0]
+    h = common.norm(x, p["ln"], cfg.norm)[:, 0]     # [B, D]
+
+    wi = fsdp_gather(p["wi"], ctx, 0)
+    xz = h @ wi
+    x_in, z = jnp.split(xz, 2, axis=-1)             # [B, Di_loc]
+
+    # conv state: last K-1 inputs
+    conv_hist = jnp.concatenate(
+        [cache["conv"], x_in[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"].astype(F32)                      # [Di_loc, K]
+    x_c = jnp.einsum("bkc,ck->bc", conv_hist.astype(F32), w)
+    x_c = jax.nn.silu(x_c)
+    new_conv = conv_hist[:, 1:]
+
+    Bm = h.astype(F32) @ p["wb"].astype(F32)         # [B, N]
+    Cm = h.astype(F32) @ p["wc"].astype(F32)
+    dtr = h @ p["wdt1"].astype(h.dtype)
+    dt = jax.nn.softplus(dtr.astype(F32) @ p["wdt2"].astype(F32)
+                         + p["dt_bias"][None])
+    A = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt[..., None] * A[None])         # [B,Di_loc,N]
+    drive = (dt * x_c)[..., None] * Bm[:, None, :]
+    h_new = decay * cache["ssm"] + drive
+    y = jnp.einsum("bdn,bn->bd", h_new, Cm)
+    y = y + p["d_skip"][None] * x_c
+    y = (y * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+
+    wo = fsdp_gather(p["wo"], ctx, 1)
+    out = lax.psum(y[:, None, :] @ wo, ctx.tp)
+    cache = {"conv": new_conv, "ssm": h_new}
+    return x + out, cache
+
+
+def _stats(h, p, ctx):
+    if ctx.mode == "train" and ctx.collect_stats:
+        pen, occ = boundary.boundary_penalty(h, p, ctx.codec)
+        return pen.astype(jnp.float32), occ.astype(jnp.float32)
+    z = jnp.zeros((), jnp.float32)
+    return z, z

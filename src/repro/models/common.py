@@ -1,0 +1,222 @@
+"""Per-device model math: norms, rotary embeddings, chunked attention.
+
+Everything here is plain single-shard jnp — sharding and boundary codecs
+live in ``blocks.py``.  Attention is an online-softmax ("flash") double
+loop over q/kv chunks so 32k-sequence prefill never materializes an SxS
+score matrix.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    h = x.astype(F32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = h * lax.rsqrt(var + eps)
+    return (h * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias=None, eps=1e-5):
+    h = x.astype(F32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    h = (h - mu) * lax.rsqrt(var + eps)
+    h = h * (1.0 + scale.astype(F32))
+    if bias is not None:
+        h = h + bias.astype(F32)
+    return h.astype(x.dtype)
+
+
+def norm(x, scale, kind="rmsnorm"):
+    return rms_norm(x, scale) if kind == "rmsnorm" else layer_norm(x, scale)
+
+
+def act_fn(x, kind="silu"):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def softcap(x, cap):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE and M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=F32) / d_head))
+
+
+def apply_rope(x, positions, theta=1e4):
+    """x [B, S, H, dh]; positions [B, S] (int)."""
+    B, S, H, dh = x.shape
+    inv = rope_freqs(dh, theta)                              # [dh/2]
+    ang = positions.astype(F32)[..., None] * inv             # [B, S, dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta=1e4, sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: head-dim/2 split into (t, h, w) sections,
+    each rotated by its own position stream.  positions3 [3, B, S]."""
+    B, S, H, dh = x.shape
+    half = dh // 2
+    assert sum(sections) == half, (sections, dh)
+    inv = rope_freqs(dh, theta)                              # [half]
+    angs = []
+    start = 0
+    for i, sec in enumerate(sections):
+        p = positions3[i].astype(F32)[..., None]             # [B, S, 1]
+        angs.append(p * inv[start:start + sec])
+        start += sec
+    ang = jnp.concatenate(angs, axis=-1)                     # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash) attention — full/causal/sliding-window, GQA, softcap
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                    q_chunk=512, kv_chunk=512, q_offset=0):
+    """Online-softmax attention.
+
+    q [B, Sq, Hq, dh]; k, v [B, Skv, Hkv, dh]; Hq % Hkv == 0 (GQA).
+    ``window`` > 0 restricts attention to the last ``window`` positions
+    (sliding window); ``cap`` applies logit soft-capping (gemma2).
+    ``q_offset``: absolute position of q[0] (for decode/prefill-continue).
+    Returns [B, Sq, Hq, dh].
+    """
+    B, Sq, Hq, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = 1.0 / math.sqrt(dh)
+
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    nq, nk = Sq // qc, Skv // kc
+    assert Sq % qc == 0 and Skv % kc == 0, (Sq, qc, Skv, kc)
+
+    # [B, nq, qc, Hq, dh] -> iterate q chunks
+    qr = q.reshape(B, nq, qc, Hq, dh)
+
+    def one_q_chunk(qi, q_blk):
+        # q_blk [B, qc, Hq, dh]
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, kj):
+            m, l, o = carry
+            k_blk = lax.dynamic_slice_in_dim(k, kj * kc, kc, axis=1)
+            v_blk = lax.dynamic_slice_in_dim(v, kj * kc, kc, axis=1)
+            k_pos = kj * kc + jnp.arange(kc)
+            kb = k_blk.astype(F32)
+            if Hkv != Hq:
+                kb = jnp.repeat(kb, g, axis=2)
+            # scores [B, Hq, qc, kc]
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk.astype(F32), kb)
+            s = s * scale
+            s = softcap(s, cap)
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            vb = v_blk.astype(F32)
+            if Hkv != Hq:
+                vb = jnp.repeat(vb, g, axis=2)
+            o_new = o * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, Hq, qc), -1e30, F32)
+        l0 = jnp.zeros((B, Hq, qc), F32)
+        o0 = jnp.zeros((B, Hq, qc, dh), F32)
+        (m, l, o), _ = lax.scan(kv_step, (m0, l0, o0), jnp.arange(nk))
+        out = o / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3)  # [B, qc, Hq, dh]
+
+    # remat each q-chunk: without this the kv-scan saves per-(q,k)-pair
+    # softmax residuals for backward — O(S^2) HBM, fatal at 32k
+    one_q_chunk = jax.checkpoint(one_q_chunk, prevent_cse=False)
+    outs = lax.map(lambda args: one_q_chunk(*args),
+                   (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4)))
+    # outs [nq, B, qc, Hq, dh]
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention_partial(q, k_shard, v_shard, *, pos, shard_offset,
+                             window=0, cap=0.0):
+    """One decode step over a *sequence shard* of the KV cache.
+
+    q [B, Hq, dh]; k_shard/v_shard [B, Ss, Hkv, dh]; pos: current absolute
+    position (scalar); shard_offset: absolute position of this shard's
+    first cache slot.  Returns (out [B, Hq, dh] — unnormalized partial,
+    lse [B, Hq]) for cross-shard LSE combination.
+    """
+    B, Hq, dh = q.shape
+    _, Ss, Hkv, _ = k_shard.shape
+    g = Hq // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    kb = k_shard.astype(F32)
+    vb = v_shard.astype(F32)
+    if Hkv != Hq:
+        kb = jnp.repeat(kb, g, axis=2)
+        vb = jnp.repeat(vb, g, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(F32), kb) * scale
+    s = softcap(s, cap)
+    k_pos = shard_offset + jnp.arange(Ss)
+    mask = k_pos[None, None, :] <= pos
+    if window:
+        mask &= (pos - k_pos[None, None, :]) < window
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p, vb)
+    o = o / jnp.maximum(l[..., None], 1e-30)        # locally normalized
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return o, lse
+
+
+def combine_decode_partials(o_norm, lse, axis_names):
+    """LSE-weighted combination of locally-normalized decode partials.
+
+    out = sum_d w_d * o_d / sum_d w_d,  w_d = exp(lse_d - max_d lse_d).
+    """
+    m = lax.pmax(lse, axis_names)                   # [B, Hq]
+    w = jnp.exp(lse - m)
+    o_sum = lax.psum(o_norm * w[..., None], axis_names)
+    l_sum = lax.psum(w, axis_names)
+    return o_sum / jnp.maximum(l_sum[..., None], 1e-30)

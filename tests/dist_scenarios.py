@@ -1,0 +1,280 @@
+"""Multi-device scenarios run in subprocesses (8 fake CPU devices).
+
+Invoked by tests/test_distributed.py as:
+    python tests/dist_scenarios.py <scenario>
+Exit code 0 = pass.  XLA device-count env must be set before jax import,
+which is why these run out-of-process (smoke tests elsewhere keep 1
+device per the dry-run contract).
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+
+def mesh24():
+    from repro.launch.mesh import make_mesh
+    return make_mesh((2, 4), ("data", "model"))
+
+
+def scenario_boundary_codecs():
+    from repro.core import boundary, spike
+    mesh = mesh24()
+    D = 64
+    bp = spike.init_spike_params(D)
+    sm = lambda f, ins, outs: jax.shard_map(f, mesh=mesh, in_specs=ins,
+                                            out_specs=outs, check_vma=False)
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, D)) * 0.5
+    for name, codec, tol in [
+            ("none", boundary.ANN, 1e-6),
+            ("int8", boundary.BoundaryCodec(mode="int8"), 0.02),
+            ("spike", boundary.HNN_FAITHFUL, 0.2),
+            ("spike_fused", boundary.HNN_FUSED, 0.2),
+            ("spike_pack4", boundary.HNN_PACK4, 0.25),
+            ("sparse_topk",
+             boundary.BoundaryCodec(mode="sparse_topk", capacity=0.99), 0.3)]:
+        def f(xx, t, l):
+            return boundary.coded_all_gather(
+                xx, {"theta": t, "log_scale": l}, codec, "model", axis=0)
+        fm = sm(f, (P(("data", "model")), P(), P()), P("data"))
+        y = fm(x, bp["theta"], bp["log_scale"])
+        err = float(jnp.sqrt(jnp.mean((y - x) ** 2))
+                    / jnp.sqrt(jnp.mean(x ** 2)))
+        assert err <= tol, (name, err)
+        g = jax.grad(lambda a, t, l: fm(a, t, l).sum())(
+            x, bp["theta"], bp["log_scale"])
+        assert np.isfinite(np.array(g)).all(), name
+    # faithful == fused on the wire
+    c1 = spike.encode(x, bp, spike.SpikeConfig(T=15, faithful=True))
+    c2 = spike.encode(x, bp, spike.SpikeConfig(T=15, faithful=False))
+    assert (np.array(c1) == np.array(c2)).all()
+    print("boundary codecs OK")
+
+
+def scenario_train_archs():
+    from repro.configs import get_config, list_archs
+    from repro.configs.base import smoke_shape
+    from repro.configs.reduced import reduced
+    from repro.launch import specs as SP, train as TR
+    mesh = mesh24()
+    cell = smoke_shape("train")
+    names = sys.argv[2].split(",") if len(sys.argv) > 2 else list_archs()
+    for name in names:
+        cfg = reduced(get_config(name))
+        plan = SP.make_plan(cfg, cell, mesh)
+        step, *_ = TR.make_train_step(cfg, plan, mesh, with_optimizer=False)
+        params = TR.init_sharded_params(cfg, plan, mesh,
+                                        jax.random.PRNGKey(0))
+        B, S = cell.global_batch, cell.seq_len
+        tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                 cfg.vocab, jnp.int32)
+        batch = {"tokens": tok, "labels": jnp.roll(tok, -1, axis=1)}
+        if cfg.is_encdec:
+            batch["enc_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(2), (B, S // 2, cfg.d_model),
+                cfg.dtype) * 0.1
+            batch["tokens"] = tok[:, :S // 2]
+            batch["labels"] = batch["tokens"]
+        if cfg.rope_kind == "mrope":
+            batch["positions3"] = jnp.broadcast_to(
+                jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+        loss, grads, metrics = step(params, batch)
+        l = float(metrics["loss"])
+        assert np.isfinite(l), (name, l)
+        gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+        assert np.isfinite(gn) and gn > 0, name
+        print(f"train OK {name} loss={l:.3f}")
+
+
+def scenario_decode_chain():
+    import jax.tree_util as jtu
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.configs.reduced import reduced
+    from repro.launch import specs as SP, train as TR, serve as SV
+    mesh = mesh24()
+    for name, B in (("gemma2-2b", 2), ("jamba-1.5-large-398b", 1),
+                    ("xlstm-125m", 2)):
+        cfg = reduced(get_config(name)).replace(hnn_mode="ann")
+        S = 16
+        cell = ShapeCell("d", S, B, "decode")
+        plan = SP.make_plan(cfg, cell, mesh)
+        params = TR.init_sharded_params(cfg, plan, mesh,
+                                        jax.random.PRNGKey(0))
+        pre, *_ = SV.make_prefill_step(cfg, plan, mesh)
+        dec, _, _ = SV.make_decode_step(cfg, plan, mesh)
+        structs, _ = SP.decode_input_specs(plan)
+        tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                 cfg.vocab, jnp.int32)
+        logits_pre, _ = pre(params, {"tokens": tok, "labels": tok})
+
+        def init_leaf(path, s):
+            if any(getattr(p, "key", None) == "pp" for p in path):
+                return jnp.full(s.shape, -1e30, s.dtype)
+            return jnp.zeros(s.shape, s.dtype)
+        cache = jtu.tree_map_with_path(
+            init_leaf, structs["cache"],
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        for t in range(S):
+            logits_dec, cache = dec(params, cache, tok[:, t],
+                                    jnp.asarray(t, jnp.int32))
+        a = np.array(logits_pre, np.float32)
+        b = np.array(logits_dec, np.float32)
+        err = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+        assert err < 0.05, (name, err)
+        print(f"decode chain OK {name} err={err:.4f}")
+
+
+def scenario_mini_dryrun():
+    """lower+compile train/decode on the 8-device mesh, parse collectives."""
+    from repro.configs import get_config, SHAPES
+    from repro.configs.base import ShapeCell
+    from repro.launch import roofline as RL, specs as SP, train as TR
+    from repro.optim import adamw
+    mesh = mesh24()
+    cfg = get_config("qwen1.5-0.5b")
+    cell = ShapeCell("t", 512, 8, "train")
+    plan = SP.make_plan(cfg, cell, mesh)
+    step, *_ = TR.make_train_step(cfg, plan, mesh, with_optimizer=True)
+    ap, _ = TR.abstract_sharded_params(cfg, plan)
+    aopt = adamw.abstract_opt_state(ap)
+    ab, _ = SP.train_input_specs(plan)
+    compiled = step.lower(ap, aopt, ab).compile()
+    cost = compiled.cost_analysis()
+    assert cost.get("flops", 0) > 0
+    stats = RL.parse_collectives(compiled.as_text())
+    assert stats.wire_bytes > 0 and len(stats.counts) >= 2, stats.counts
+    ma = compiled.memory_analysis()
+    assert ma.temp_size_in_bytes > 0
+    print("mini dryrun OK:", dict(stats.counts))
+
+
+def scenario_elastic_checkpoint():
+    """Save on (2,4) mesh, restore re-sharded onto (1,8)."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import get_config
+    from repro.configs.base import smoke_shape
+    from repro.configs.reduced import reduced
+    from repro.launch import specs as SP, train as TR
+    from repro.launch.mesh import make_mesh
+    import tempfile
+    mesh_a = mesh24()
+    mesh_b = make_mesh((1, 8), ("data", "model"))
+    cfg = reduced(get_config("qwen1.5-0.5b")).replace(
+        d_model=64, n_heads=8, n_kv_heads=8)
+    cell = smoke_shape("train")
+    plan_a = SP.make_plan(cfg, cell, mesh_a)
+    plan_b = SP.make_plan(cfg, cell, mesh_b)
+    params = TR.init_sharded_params(cfg, plan_a, mesh_a,
+                                    jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(3, params)
+        _, pspecs_b, _ = TR.shard_params_specs(cfg, plan_b)
+        restored, step = mgr.restore(params, mesh=mesh_b, specs=pspecs_b)
+        assert step == 3
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("elastic checkpoint OK")
+
+
+def scenario_compressed_psum():
+    from repro.optim.compress import psum_compressed
+    mesh = mesh24()
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 33)) * 2
+
+    def f(g):
+        out, err = psum_compressed(g, "model")
+        return out, err
+    fm = jax.shard_map(f, mesh=mesh, in_specs=P(("data", "model")),
+                       out_specs=(P(("data", "model")),
+                                  P(("data", "model"))), check_vma=False)
+    out, err = fm(x)
+    # reference: exact psum over model of replicated? x is sharded; each
+    # model-group of 4 shards sums -> compare against exact groupwise sum
+    xs = np.array(x).reshape(2, 4, 1, 33)
+    exact = xs.sum(axis=1, keepdims=True).repeat(4, axis=1).reshape(8, 1, 33)[:, 0]
+    rel = np.abs(np.array(out) - exact).max() / (np.abs(exact).max() + 1e-9)
+    assert rel < 0.05, rel
+    print("compressed psum OK rel", rel)
+
+
+
+
+def scenario_analytic_crosscheck():
+    """Analytic wire model vs HLO-parsed collectives (same mesh/plan).
+
+    The parsed per-unit wire bytes must agree with the analytic per-unit
+    boundary+FSDP bytes to within 2x (the analytic model intentionally
+    ignores reshape paddings and sub-10%% glue collectives)."""
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.launch import analytic as AN, roofline as RL, specs as SP, \
+        train as TR
+    mesh = mesh24()
+    cfg = get_config("qwen1.5-0.5b")
+    cell = ShapeCell("t", 512, 8, "train")
+    plan = SP.make_plan(cfg, cell, mesh)
+    step, *_ = TR.make_train_step(cfg, plan, mesh, with_optimizer=False,
+                                  microbatches=1)
+    ap, _ = TR.abstract_sharded_params(cfg, plan)
+    ab, _ = SP.train_input_specs(plan)
+    compiled = step.lower(ap, ab).compile()
+    stats = RL.parse_collectives(compiled.as_text())
+    # structural expectation for the PARSED module (scan bodies counted
+    # once): one unit's boundary+FSDP wire, plus the embedding/LM-head
+    # weight gathers outside the scan (fwd + remat + grad-RS passes)
+    w = AN.wire_bytes_per_elem(cfg.codec)
+    tp, dp = 4, 2
+    B_loc, S = 8 // dp, 512
+    per_unit = AN.block_cost("attn", cfg, B_loc, S, tp, dp, w).wire
+    D, Vp = cfg.d_model, cfg.vocab_padded(tp)
+    emb_gather = (dp - 1) / dp * (Vp * D * 2.0 / tp)   # per fwd pass
+    expected = per_unit * 3 + 2 * emb_gather * 4       # embed+head, ~4 passes
+    ratio = stats.wire_bytes / max(expected, 1.0)
+    assert 0.3 <= ratio <= 3.0, (stats.wire_bytes, expected, ratio)
+    print(f"analytic crosscheck OK: parsed={stats.wire_bytes/1e6:.1f}MB "
+          f"expected={expected/1e6:.1f}MB ratio={ratio:.2f}")
+
+
+def scenario_decode_replicated_weights():
+    """replicate_weights=True must be numerically identical to the
+    FSDP-sharded decode path (same params, same logits)."""
+    import jax.tree_util as jtu
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.configs.reduced import reduced
+    from repro.launch import serve as SV, specs as SP, train as TR
+    mesh = mesh24()
+    cfg = reduced(get_config("qwen1.5-0.5b")).replace(hnn_mode="ann")
+    S, B = 16, 2
+    cell = ShapeCell("d", S, B, "decode")
+    plan = SP.make_plan(cfg, cell, mesh)
+    params = TR.init_sharded_params(cfg, plan, mesh, jax.random.PRNGKey(0))
+    pre, *_ = SV.make_prefill_step(cfg, plan, mesh)
+    dec_a, _, _ = SV.make_decode_step(cfg, plan, mesh,
+                                      replicate_weights=False)
+    dec_b, _, _ = SV.make_decode_step(cfg, plan, mesh,
+                                      replicate_weights=True)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab,
+                             jnp.int32)
+    _, cache = pre(params, {"tokens": tok, "labels": tok})
+    la, _ = dec_a(params, cache, tok[:, -1], jnp.asarray(S - 1, jnp.int32))
+    _, cache2 = pre(params, {"tokens": tok, "labels": tok})
+    lb, _ = dec_b(params, cache2, tok[:, -1], jnp.asarray(S - 1, jnp.int32))
+    err = float(jnp.max(jnp.abs(la - lb)))
+    assert err < 1e-2, err
+    print("replicated-weight decode OK, max err", err)
+
+
+SCENARIOS = {k[len("scenario_"):]: v for k, v in list(globals().items())
+             if k.startswith("scenario_")}
+
+if __name__ == "__main__":
+    SCENARIOS[sys.argv[1]]()
+    print("PASS", sys.argv[1])

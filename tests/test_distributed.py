@@ -1,0 +1,60 @@
+"""Multi-device integration tests (subprocess: 8 fake CPU devices)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SCRIPT = os.path.join(HERE, "dist_scenarios.py")
+ROOT = os.path.dirname(HERE)
+
+
+def run(scenario, *args, timeout=520):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run([sys.executable, SCRIPT, scenario, *args],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, f"{scenario}:\n{r.stdout}\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_boundary_codecs_multidevice():
+    run("boundary_codecs")
+
+
+@pytest.mark.parametrize("group", [
+    "gemma2-2b,granite-20b,qwen1.5-0.5b,qwen1.5-4b",
+    "jamba-1.5-large-398b,llama4-maverick-400b-a17b",
+    "qwen2-moe-a2.7b,qwen2-vl-2b",
+    "rwkv-paper,seamless-m4t-medium,xlstm-125m",
+])
+def test_train_smoke_all_archs(group):
+    out = run("train_archs", group)
+    assert out.count("train OK") == len(group.split(","))
+
+
+def test_decode_chain_consistency():
+    run("decode_chain")
+
+
+def test_mini_dryrun_compiles_with_collectives():
+    run("mini_dryrun")
+
+
+def test_elastic_checkpoint_reshard():
+    run("elastic_checkpoint")
+
+
+def test_compressed_gradient_psum():
+    run("compressed_psum")
+
+
+def test_analytic_matches_hlo_parse():
+    run("analytic_crosscheck")
+
+
+def test_decode_replicated_weights_equivalent():
+    run("decode_replicated_weights")

@@ -1,0 +1,72 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spike
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (100, 300), (256, 512),
+                                   (33, 1000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T", [7, 15])
+def test_lif_encode_matches_ref(shape, dtype, T):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+    theta = jnp.full((shape[1],), 0.05)
+    scale = jnp.full((shape[1],), 2.0)
+    out = ops.lif_encode(x, theta, scale, T=T)
+    expect = ref.lif_encode_ref(x, theta, scale, T=T)
+    np.testing.assert_array_equal(np.array(out), np.array(expect))
+
+
+def test_lif_encode_matches_closed_form():
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 256))
+    theta = jnp.full((256,), 0.02)
+    scale = jnp.full((256,), 1.5)
+    k = ops.lif_encode(x, theta, scale, T=15)
+    cf = spike.rate_encode_signed(x, scale, theta, 15)
+    assert (np.array(k) == np.array(cf).astype(np.int8)).mean() == 1.0
+
+
+@pytest.mark.parametrize("mkn", [(8, 128, 128), (64, 300, 200),
+                                 (256, 512, 256)])
+@pytest.mark.parametrize("T", [7, 15])
+def test_count_matmul_matches_ref(mkn, T):
+    m, k, n = mkn
+    c = jax.random.randint(jax.random.PRNGKey(0), (m, k), -T, T + 1,
+                           jnp.int8)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (k,))) + 0.5
+    y = ops.count_matmul(c, w, s, T=T, out_dtype=jnp.float32)
+    ye = ref.count_matmul_ref(c, w, s, T=T, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.array(y), np.array(ye), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (64, 250), (256, 1024)])
+def test_pack4_roundtrip(shape):
+    if shape[1] % 2:
+        shape = (shape[0], shape[1] + 1)
+    wire = jax.random.randint(jax.random.PRNGKey(0), shape, 0, 15,
+                              jnp.uint8)
+    p = ops.pack4(wire)
+    assert p.shape == (shape[0], shape[1] // 2)
+    np.testing.assert_array_equal(np.array(ops.unpack4(p)), np.array(wire))
+    np.testing.assert_array_equal(np.array(p), np.array(ref.pack4_ref(wire)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 64), cols=st.integers(1, 300),
+       t=st.sampled_from([3, 7, 15]))
+def test_lif_encode_hypothesis(rows, cols, t):
+    x = jax.random.normal(jax.random.PRNGKey(rows * 1000 + cols),
+                          (rows, cols))
+    theta = jnp.full((cols,), 0.01)
+    scale = jnp.full((cols,), 1.0)
+    out = np.array(ops.lif_encode(x, theta, scale, T=t))
+    expect = np.array(ref.lif_encode_ref(x, theta, scale, T=t))
+    np.testing.assert_array_equal(out, expect)
+    assert np.abs(out).max() <= t

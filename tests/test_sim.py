@@ -1,0 +1,72 @@
+"""NoC simulator: paper-claim ranges + structural properties."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sim.noc import NocConfig, NocSim, PAPER_MODELS, fc
+
+
+def _ratios(model, **kw):
+    layers = PAPER_MODELS[model]()
+    reps = {m: NocSim(NocConfig(mode=m, **kw)).simulate(layers)
+            for m in ("ann", "snn", "hnn")}
+    a, s, h = reps["ann"], reps["snn"], reps["hnn"]
+    return (a.latency_s / h.latency_s, a.total_energy / h.total_energy,
+            reps)
+
+
+def test_paper_baseline_ranges():
+    """Fig 10/12 baseline: HNN speedup and energy gain in paper ranges."""
+    for m in ("rwkv", "msresnet18", "efficientnet-b4"):
+        lat, en, _ = _ratios(m)
+        assert 1.0 <= lat <= 15.2, (m, lat)
+        assert 0.95 <= en <= 10.0, (m, en)
+
+
+def test_rwkv_smallest_margin():
+    """Paper §5.3: RWKV (fewest chips) has the lowest HNN margin."""
+    margins = {m: _ratios(m)[1] for m in PAPER_MODELS}
+    assert margins["rwkv"] == min(margins.values())
+
+
+def test_gain_grows_with_bits():
+    """Fig 11: HNN speedup grows with activation bit width."""
+    lats = [_ratios("msresnet18", bits=b)[0] for b in (8, 16, 32)]
+    assert lats[0] < lats[1] < lats[2]
+
+
+def test_sparsity_improves_latency():
+    """Fig 7: more sparsity -> faster HNN inference."""
+    h1 = NocSim(NocConfig(mode="hnn", spike_sparsity=0.8)).simulate(
+        PAPER_MODELS["msresnet18"]())
+    h2 = NocSim(NocConfig(mode="hnn", spike_sparsity=0.95)).simulate(
+        PAPER_MODELS["msresnet18"]())
+    assert h2.latency_s < h1.latency_s
+
+
+def test_chip_scaling_claim():
+    """§5.3: EfficientNet-B4 needs far more chips than RWKV/MS-ResNet."""
+    chips = {m: NocSim(NocConfig(mode="hnn")).simulate(PAPER_MODELS[m]())
+             .chips for m in PAPER_MODELS}
+    assert chips["efficientnet-b4"] > 50 * chips["rwkv"]
+    assert chips["efficientnet-b4"] > 10 * chips["msresnet18"]
+
+
+@settings(max_examples=30, deadline=None)
+@given(prev=st.integers(1, 4096), cur=st.integers(1, 4096))
+def test_average_hops_eq4(prev, cur):
+    sim = NocSim(NocConfig())
+    h = sim.average_hops(prev, cur)
+    assert h >= 1.0
+    assert h == pytest.approx(
+        abs(cur - prev) / 2.0 / NocConfig().grid + 1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_in=st.integers(16, 4096), n_out=st.integers(16, 4096))
+def test_energy_nonnegative_and_monotone_in_macs(n_in, n_out):
+    cfg = NocConfig(mode="ann")
+    r1 = NocSim(cfg).simulate([fc("a", n_in, n_out)])
+    r2 = NocSim(cfg).simulate([fc("a", n_in, 2 * n_out)])
+    assert 0 < r1.total_energy <= r2.total_energy

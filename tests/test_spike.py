@@ -1,0 +1,75 @@
+"""Spike-code invariants (hypothesis property tests on the core)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spike
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), t=st.sampled_from([7, 15, 31]),
+       scale=st.floats(0.5, 4.0))
+def test_roundtrip_error_bound(seed, t, scale):
+    """|decode(encode(x)) - x| <= scale/(2T) for in-range, above-gate x."""
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (64,),
+                           minval=-scale, maxval=scale)
+    params = {"theta": jnp.zeros((64,)),
+              "log_scale": jnp.full((64,), np.log(scale))}
+    cfg = spike.SpikeConfig(T=t)
+    y = spike.decode(spike.encode(x, params, cfg), params, cfg, jnp.float32)
+    err = np.abs(np.array(y) - np.array(x))
+    assert err.max() <= scale / (2 * t) + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_gate_silences_below_threshold(seed):
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (128,),
+                           minval=-0.049, maxval=0.049)
+    params = {"theta": jnp.full((128,), 0.05), "log_scale": jnp.zeros((128,))}
+    cfg = spike.SpikeConfig(T=15)
+    counts = spike.encode(x, params, cfg)
+    assert np.abs(np.array(counts)).max() == 0.0
+
+
+def test_faithful_equals_fused():
+    x = jax.random.normal(jax.random.PRNGKey(0), (40, 80))
+    params = spike.init_spike_params(80)
+    cF = spike.encode(x, params, spike.SpikeConfig(T=15, faithful=True))
+    cC = spike.encode(x, params, spike.SpikeConfig(T=15, faithful=False))
+    np.testing.assert_array_equal(np.array(cF), np.array(cC))
+
+
+def test_sparsity_loss_hinge():
+    cfg = spike.SpikeConfig(T=10, target_rate=0.5, lam=1.0)
+    dense = jnp.full((100,), 10.0)   # rate 1.0
+    sparse = jnp.zeros((100,))
+    assert float(spike.sparsity_loss(dense, 10, 0.5, 1.0)) > 0
+    assert float(spike.sparsity_loss(sparse, 10, 0.5, 1.0)) == 0.0
+
+
+def test_analytic_vjp_matches_autodiff():
+    from repro.core import boundary
+    cfg = spike.SpikeConfig(T=15)
+    D = 48
+    x = jax.random.normal(jax.random.PRNGKey(0), (29, D)) * 0.8
+    theta = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (D,))) * 0.05
+    ls = jax.random.normal(jax.random.PRNGKey(2), (D,)) * 0.3
+    g = jax.random.normal(jax.random.PRNGKey(3), (29, D))
+    _, vjp = jax.vjp(lambda a, t, l: boundary._local_roundtrip(
+        a, {"theta": t, "log_scale": l}, boundary.HNN_FUSED), x, theta, ls)
+    ref = vjp(g)
+    out = spike.roundtrip_vjp(x, theta, ls, g, cfg)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-4,
+                                   atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_pack4_lossless(seed):
+    w = jax.random.randint(jax.random.PRNGKey(seed), (16, 30), 0, 15,
+                           jnp.uint8)
+    np.testing.assert_array_equal(np.array(spike.unpack4(spike.pack4(w))),
+                                  np.array(w))
