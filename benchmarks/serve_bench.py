@@ -1,0 +1,95 @@
+"""Serving throughput benchmark: tokens/s + wire bytes/token per codec.
+
+Runs the continuous-batching engine (>=4 slots) on a reduced config on
+CPU, one pass per boundary codec, and reports
+
+    serve/<codec>,us_per_token,tok/s=... wireKB/tok=...
+
+in the ``name,us_per_call,derived`` CSV contract of benchmarks/run.py.
+Wire bytes come from parsing the compiled batched decode step's
+collectives (repro.launch.roofline), scaled across the mesh — the
+headline serving-side artifact of the paper: the spike codec shrinks
+the per-token die-to-die traffic while the scheduler keeps every slot
+busy.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--mesh 1x2]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+CODECS = ("none", "int8", "spike_fused")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--mesh", default="1x2")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--codecs", default=",".join(CODECS))
+    args = ap.parse_args()
+
+    dp, tp = (int(x) for x in args.mesh.split("x"))
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={dp * tp}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.configs.reduced import reduced
+    from repro.launch import specs as SP, train as TR
+    from repro.launch.mesh import make_mesh
+    from repro.serving import EngineConfig, Request, ServingEngine
+
+    mesh = make_mesh((dp, tp), ("data", "model"))
+    max_seq = args.prompt_len + args.gen
+    rng = np.random.RandomState(0)
+    prompts = [list(rng.randint(0, 256, args.prompt_len))
+               for _ in range(args.requests)]
+
+    baseline_tokens = None
+    for codec in args.codecs.split(","):
+        hnn = "ann" if codec == "none" else "hnn"
+        cfg = reduced(get_config(args.arch, hnn_mode=hnn)).replace(
+            codec=codec)
+        ecfg = EngineConfig(num_slots=args.slots, max_seq=max_seq,
+                            prefill_len=args.prompt_len)
+        cell = ShapeCell("serve_decode", max_seq, args.slots, "decode")
+        plan = SP.make_plan(cfg, cell, mesh)
+        params = TR.init_sharded_params(cfg, plan, mesh,
+                                        jax.random.PRNGKey(0))
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=args.gen)
+                for i, p in enumerate(prompts)]
+
+        engine = ServingEngine(cfg, mesh, params, ecfg)
+        engine.warmup(prompts[0])
+
+        t0 = time.perf_counter()
+        results = engine.run(reqs)
+        dt = time.perf_counter() - t0
+        toks = engine.tokens_generated
+        assert len(results) == args.requests
+        if baseline_tokens is None:
+            baseline_tokens = toks
+        assert toks == baseline_tokens, (
+            f"codec {codec} generated {toks} != {baseline_tokens} tokens; "
+            "us_per_token not comparable across codecs")
+        _, per_tok = engine.decode_wire_stats()
+        us_per_tok = dt / toks * 1e6
+        print(f"serve/{codec},{us_per_tok:.1f},"
+              f"tok/s={toks/dt:.1f} wireKB/tok={per_tok/1e3:.2f} "
+              f"steps={engine.decode_steps} slots={args.slots}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

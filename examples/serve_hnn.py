@@ -1,7 +1,12 @@
-"""Batched serving with spike-coded boundaries: prefill + decode loop.
+"""Batched serving on the continuous-batching engine (repro.serving).
+
+Admits a stream of variable-length requests into a fixed slot pool,
+decodes all slots in lockstep with per-slot positions/temperatures and
+fused on-device sampling, and keeps the spike wire on every decode-path
+boundary collective.
 
     PYTHONPATH=src python examples/serve_hnn.py --arch qwen1.5-0.5b \
-        --mesh 1x2 --batch 4 --prompt-len 64 --gen 32
+        --mesh 1x2 --slots 4 --requests 8 --prompt-len 16 --gen 16
 """
 import argparse
 import time
@@ -13,56 +18,69 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ShapeCell
 from repro.configs.reduced import reduced
-from repro.launch import serve as SV
 from repro.launch import specs as SP
 from repro.launch import train as TR
 from repro.launch.mesh import make_mesh
+from repro.serving import EngineConfig, Request, ServingEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--mesh", default="1x2")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="cache length (0: prompt-len + gen)")
     ap.add_argument("--hnn-mode", default="hnn")
+    ap.add_argument("--codec", default=None,
+                    help="override cfg codec (none|int8|spike_fused|...)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=0.0)
     args = ap.parse_args()
 
     dp, tp = (int(x) for x in args.mesh.split("x"))
     mesh = make_mesh((dp, tp), ("data", "model"))
     cfg = reduced(get_config(args.arch, hnn_mode=args.hnn_mode))
-    S = args.prompt_len + args.gen
-    cell = ShapeCell("serve", S, args.batch, "decode")
+    if args.codec:
+        cfg = cfg.replace(codec=args.codec)
+    max_seq = args.max_seq or args.prompt_len + args.gen
+    ecfg = EngineConfig(num_slots=args.slots, max_seq=max_seq,
+                        prefill_len=args.prompt_len,
+                        top_k=args.top_k, top_p=args.top_p)
+
+    cell = ShapeCell("serve_decode", ecfg.max_seq, ecfg.num_slots, "decode")
     plan = SP.make_plan(cfg, cell, mesh)
     params = TR.init_sharded_params(cfg, plan, mesh, jax.random.PRNGKey(0))
-    pre, *_ = SV.make_prefill_step(cfg, plan, mesh)
-    dec, _, _ = SV.make_decode_step(cfg, plan, mesh)
+    engine = ServingEngine(cfg, mesh, params, ecfg)
 
-    # pad prompts into the full-length cache (positions beyond prompt are
-    # masked by pos during decode)
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, S), 0, cfg.vocab, jnp.int32)
-    t0 = time.time()
-    logits, cache = pre(params, {"tokens": prompts, "labels": prompts})
-    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-    jax.block_until_ready(nxt)
-    t_pre = time.time() - t0
+    rng = np.random.RandomState(1)
+    reqs = [Request(rid=i,
+                    prompt=list(rng.randint(0, cfg.vocab, args.prompt_len)),
+                    max_new_tokens=args.gen,
+                    temperature=args.temperature)
+            for i in range(args.requests)]
 
-    out_tokens = [np.array(nxt)]
+    engine.warmup(reqs[0].prompt)
+
     t0 = time.time()
-    for t in range(args.gen - 1):
-        logits, cache = dec(params, cache, nxt,
-                            jnp.asarray(args.prompt_len + t, jnp.int32))
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-        out_tokens.append(np.array(nxt))
-    jax.block_until_ready(nxt)
-    t_dec = time.time() - t0
-    toks = args.batch * (args.gen - 1)
-    print(f"{cfg.name} ({cfg.hnn_mode}): prefill {args.prompt_len} toks in "
-          f"{t_pre*1e3:.0f}ms; decode {toks} toks in {t_dec*1e3:.0f}ms "
-          f"({toks/max(t_dec,1e-9):.1f} tok/s on CPU)")
-    print("sample:", np.stack(out_tokens, 1)[0][:16])
+    results = engine.run(reqs)
+    dt = time.time() - t0
+    toks = engine.tokens_generated
+    stats, per_tok = engine.decode_wire_stats()
+    alloc = engine.cache.allocator
+    print(f"{cfg.name} ({cfg.hnn_mode}/{cfg.codec}) mesh={args.mesh} "
+          f"slots={args.slots}: served {len(results)} requests, "
+          f"{toks} tokens in {dt*1e3:.0f}ms "
+          f"({toks/max(dt, 1e-9):.1f} tok/s on CPU)")
+    print(f"decode steps={engine.decode_steps}  "
+          f"wire {per_tok/1e3:.1f}KB/token "
+          f"({dict(stats.counts)} collectives/step)  "
+          f"cache {alloc.total_pages} pages x {alloc.page_size} positions")
+    print("sample:", results[0][:16])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,90 @@
+"""Backfill newer jax APIs on older installs (no new dependencies).
+
+The codebase targets the current jax API surface (``jax.shard_map`` with
+``check_vma``, ``jax.sharding.AxisType``, ``lax.axis_size``, ``jax.make_mesh``
+with ``axis_types``).  Some execution environments pin an older jax (e.g.
+0.4.x) where those names live elsewhere or don't exist; importing
+``repro`` installs small forwarding shims so the same code runs on both.
+Each shim is a no-op when the real API is present.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+
+
+def _install_shard_map():
+    if hasattr(jax, "shard_map"):
+        try:
+            if "check_vma" in inspect.signature(jax.shard_map).parameters:
+                return
+        except (TypeError, ValueError):
+            return
+    from jax.experimental.shard_map import shard_map as _sm
+
+    @functools.wraps(_sm)
+    def shard_map(f, mesh=None, *, in_specs, out_specs, check_vma=None,
+                  check_rep=None, **kw):
+        if check_rep is None:
+            check_rep = bool(check_vma) if check_vma is not None else True
+        return _sm(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_rep, **kw)
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_type():
+    if not hasattr(jax.sharding, "AxisType"):
+        import enum
+
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh():
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):
+        return
+    if "axis_types" in params:
+        return
+    _mm = jax.make_mesh
+
+    @functools.wraps(_mm)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        return _mm(axis_shapes, axis_names, **kw)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_axis_size():
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return
+    from jax._src.core import axis_frame
+
+    def axis_size(axis_name):
+        if isinstance(axis_name, (tuple, list)):
+            n = 1
+            for a in axis_name:
+                n *= axis_frame(a)
+            return n
+        return axis_frame(axis_name)   # static int inside shard_map
+
+    lax.axis_size = axis_size
+
+
+def install():
+    _install_shard_map()
+    _install_axis_type()
+    _install_make_mesh()
+    _install_axis_size()
+
+
+install()

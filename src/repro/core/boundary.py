@@ -288,6 +288,99 @@ def _a2a(x, axis_name):
 
 
 # ---------------------------------------------------------------------------
+# decode-path boundaries (token-replicated activations)
+# ---------------------------------------------------------------------------
+#
+# At serving time activations are [B, 1, D] and token-REPLICATED over tp
+# (every rank holds every slot's token), so the decode path has two
+# boundary shapes the training collectives don't cover:
+#
+#   coded_psum      : all-reduce of per-rank partial sums whose wire is
+#                     the coded format (spike accumulation, eq 3).
+#   wire_roundtrip  : a die-to-die hop with no collective at all — the
+#                     tensor is already replicated, but it still crosses
+#                     the spike interface, so it is encoded/decoded
+#                     locally.  This keeps decode numerics identical to
+#                     the coded gather that train/prefill apply to the
+#                     same boundary.
+#
+# Both are careful to stay BATCH-INDEPENDENT: no reduction mixes slots,
+# and int8 scales are per-token.  This is the invariant that makes
+# batched continuous decode produce token-for-token the same output as
+# single-request decode (tests/dist_scenarios.py::serving_parity).
+
+
+def wire_roundtrip(x, params, codec: BoundaryCodec):
+    """Local encode->wire->decode for a replicated decode activation."""
+    if codec.mode == "none":
+        return x
+    if codec.mode == "int8":
+        # per-token scale (NOT per-channel-over-batch): decode slots must
+        # not see each other's magnitudes
+        s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True),
+                        1e-6) / 127.0
+        return (spike.round_ste(x / s) * s).astype(x.dtype)
+    if codec.mode == "sparse_topk":
+        C = x.shape[-1]
+        k = min(max(8, int(C * codec.capacity)), C)
+        c = spike.encode(x, params, codec.cfg)
+        mag = lax.stop_gradient(jnp.abs(c))
+        thresh = jnp.sort(mag, axis=-1)[..., C - k][..., None]
+        mask = (mag >= thresh).astype(c.dtype)
+        return spike.decode(c * mask, params, codec.cfg, x.dtype)
+    return _local_roundtrip(x, params, codec)
+
+
+def coded_psum(x, params, codec: BoundaryCodec, axis_name: Axis):
+    """All-reduce partial sums across ``axis_name``; coded wire.
+
+    Each rank encodes its partial to the wire format, the int counts are
+    exchanged (all_gather of the wire tensor), and every rank decodes and
+    sums the peer contributions locally — the paper's spike-accumulation
+    semantics, matching ``coded_psum_scatter`` per element so decode and
+    train/prefill see the same boundary numerics.  ``sparse_topk`` falls
+    back to dense counts on this path (decode tensors are [B,1,D]-tiny).
+    """
+    if codec.mode == "none":
+        return lax.psum(x, axis_name)
+
+    @jax.custom_vjp
+    def _pr(x, theta, log_scale):
+        p = {"theta": theta, "log_scale": log_scale}
+        if codec.mode == "int8":
+            s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True),
+                            1e-6) / 127.0
+            wire = jnp.round(x / s).astype(jnp.int8)
+            wire_g = lax.all_gather(wire, axis_name, axis=0, tiled=False)
+            s_g = lax.all_gather(s, axis_name, axis=0, tiled=False)
+            dec = wire_g.astype(jnp.float32) * s_g.astype(jnp.float32)
+            return jnp.sum(dec, axis=0).astype(x.dtype)
+        if codec.mode == "sparse_topk":
+            counts = spike.encode(x, p, codec.cfg)
+            wire = counts.astype(jnp.int8)
+            wire_g = lax.all_gather(wire, axis_name, axis=0, tiled=False)
+            dec = spike.decode(wire_g.astype(x.dtype), p, codec.cfg,
+                               x.dtype)
+            return jnp.sum(dec, axis=0)
+        wire, _, _ = _encode_local(x, p, codec)
+        wire_g = lax.all_gather(wire, axis_name, axis=0, tiled=False)
+        dec = _decode_local(wire_g, p, codec, None, x.dtype)
+        return jnp.sum(dec, axis=0)
+
+    def _fwd(x, theta, log_scale):
+        return _pr(x, theta, log_scale), (x, theta, log_scale)
+
+    def _bwd(res, g):
+        # psum's cotangent is already replicated across the axis; each
+        # rank backprops it through its local encode/decode roundtrip
+        x, theta, log_scale = res
+        return _roundtrip_bwd(x, theta, log_scale, g, codec)
+
+    _pr.defvjp(_fwd, _bwd)
+    return _pr(x, params["theta"], params["log_scale"])
+
+
+# ---------------------------------------------------------------------------
 # coded ppermute (pipeline-stage / pod-boundary sends)
 # ---------------------------------------------------------------------------
 

@@ -3,6 +3,10 @@
 decode_step lowers the ``serve_step`` required by the decode_* / long_*
 cells: one new token against a KV/state cache of cell.seq_len, with the
 cache seq-sharded over the context-parallel axes (ctx.cp).
+
+These are the single-request building blocks.  The batched
+continuous-batching engine (slot scheduling, paged cache, fused
+distributed sampling) lives in ``repro.serving``.
 """
 from __future__ import annotations
 
@@ -11,9 +15,19 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..models import model as M
-from .specs import (CellPlan, cache_specs, decode_input_specs, make_context,
-                    train_input_specs)
+from .specs import (CellPlan, _bspec, cache_specs, decode_input_specs,
+                    make_context, train_input_specs)
 from .train import shard_params_specs
+
+
+def strip_dp_specs(pspecs):
+    """Drop the data axes from a param spec tree (weights replicated over
+    dp, tp-sharded only — the production inference layout)."""
+    def strip(spec):
+        ents = tuple(None if (e is not None and e != "model") else e
+                     for e in spec)
+        return P(*ents)
+    return jax.tree.map(strip, pspecs, is_leaf=lambda x: isinstance(x, P))
 
 
 def make_prefill_step(cfg, plan: CellPlan, mesh):
@@ -22,8 +36,7 @@ def make_prefill_step(cfg, plan: CellPlan, mesh):
     ctx = make_context(plan, "prefill")
     _, bspecs = train_input_specs(plan)
     _, cspecs = cache_specs(plan)
-    bs = None if not plan.batch_sharded else (
-        plan.dp if len(plan.dp) > 1 else plan.dp[0])
+    bs = _bspec(plan)
 
     def step(params, batch):
         logits, caches = M.forward_prefill(params, batch, ctx)
@@ -46,15 +59,7 @@ def make_decode_step(cfg, plan: CellPlan, mesh, replicate_weights=False):
     defs, pspecs, _ = shard_params_specs(cfg, plan)
     ctx = make_context(plan, "decode")
     if replicate_weights:
-        import jax as _jax
-        from jax.sharding import PartitionSpec as _P
-
-        def strip_dp(spec):
-            ents = tuple(None if (e is not None and e != "model") else e
-                         for e in spec)
-            return _P(*ents)
-        pspecs = _jax.tree.map(strip_dp, pspecs,
-                               is_leaf=lambda x: isinstance(x, _P))
+        pspecs = strip_dp_specs(pspecs)
         ctx = ctx.with_(dp_size=1)   # fsdp_gather becomes a no-op
     _, ispecs = decode_input_specs(plan)
     bs = ispecs["token"]
@@ -70,8 +75,34 @@ def make_decode_step(cfg, plan: CellPlan, mesh, replicate_weights=False):
     return jax.jit(fn, donate_argnums=(1,)), pspecs, ispecs
 
 
+def make_logits_step(cfg, plan: CellPlan, mesh):
+    """Full-sequence teacher-forced logits (parity / eval harness).
+
+    logits(params, batch) -> [B, S, V] float32 — the same boundary codec
+    path as training, no loss reduction.  Used to cross-check that N
+    steps of engine decode reproduce the teacher-forced argmax.
+    """
+    defs, pspecs, _ = shard_params_specs(cfg, plan)
+    ctx = make_context(plan, "train").with_(collect_stats=False)
+    _, bspecs = train_input_specs(plan)
+    bs = _bspec(plan)
+
+    def step(params, batch):
+        aux = M._make_aux(batch, ctx)
+        x = M.embed_tokens(params, batch["tokens"], ctx)
+        x, _, _, _ = M._run_stack(params, x, ctx, aux)
+        logits, _ = M.lm_logits_local(params, x, ctx)
+        return logits
+
+    fn = jax.shard_map(step, mesh=mesh, in_specs=(pspecs, bspecs),
+                       out_specs=P(bs, None, "model"), check_vma=False)
+    return jax.jit(fn)
+
+
 def greedy_sample(logits_local, mesh, plan: CellPlan):
-    """Greedy next-token from tp-sharded logits [B, V_loc] (host-side)."""
-    # logits gathered by jit output sharding; argmax on host is fine for
-    # the example drivers
+    """Greedy next-token from gathered logits [B, V] (host-side).
+
+    Example-driver helper only; the serving engine samples on-device
+    from tp-sharded logits (``repro.serving.sampling``).
+    """
     return jnp.argmax(logits_local, axis=-1).astype(jnp.int32)

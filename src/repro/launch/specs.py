@@ -180,3 +180,24 @@ def decode_input_specs(plan: CellPlan):
               "pos": jax.ShapeDtypeStruct((), jnp.int32)}
     specs = {"cache": cache_sp, "token": P(bs), "pos": P()}
     return inputs, specs
+
+
+def serve_decode_input_specs(plan: CellPlan):
+    """(inputs, specs) for one batched engine decode step.
+
+    Differs from ``decode_input_specs`` in the scheduler-facing inputs:
+    per-slot positions and sampling temperatures (batch-sharded like the
+    tokens) plus a replicated PRNG key.
+    """
+    cfg, cell = plan.cfg, plan.cell
+    B = cell.global_batch
+    bs = _bspec(plan)
+    cache, cache_sp = cache_specs(plan)
+    inputs = {"cache": cache,
+              "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+              "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+              "temp": jax.ShapeDtypeStruct((B,), jnp.float32),
+              "key": jax.ShapeDtypeStruct((2,), jnp.uint32)}
+    specs = {"cache": cache_sp, "token": P(bs), "pos": P(bs),
+             "temp": P(bs), "key": P()}
+    return inputs, specs

@@ -239,12 +239,14 @@ def mlp_fwd(p, x, ctx: Context, aux):
     h = common.norm(x, p["ln2"], cfg.norm)
     pen, occ = _stats(h, p["sp_in2"], ctx)
     if ctx.mode == "decode":
-        # tokens replicated over tp; classic TP, psum out
+        # tokens replicated over tp; classic TP with the coded wire on
+        # both hops (roundtrip in, spike-accumulated psum out)
+        h = boundary.wire_roundtrip(h, p["sp_in2"], ctx.codec)
         w1 = fsdp_gather(p["w1"], ctx, 0)
         w3 = fsdp_gather(p["w3"], ctx, 0)
         w2 = fsdp_gather(p["w2"], ctx, 1)
         hh = common.act_fn(h @ w1, cfg.act) * (h @ w3)
-        y = lax.psum(hh @ w2, ctx.tp)
+        y = boundary.coded_psum(hh @ w2, p["sp_out2"], ctx.codec, ctx.tp)
     else:
         xg = boundary.coded_all_gather(h, p["sp_in2"], ctx.codec, ctx.tp,
                                        axis=1)
@@ -270,14 +272,19 @@ def mlp_fwd(p, x, ctx: Context, aux):
 def attn_decode_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn",
                     prefix=""):
     """x [B_loc, 1, D] replicated over tp; cache {k,v} [B_loc, Ss, Hkv, dh]
-    seq-sharded over ctx.cp.  Returns (x', cache')."""
+    seq-sharded over ctx.cp; pos scalar or [B_loc] per-slot positions.
+    Returns (x', cache')."""
     cfg = ctx.cfg
     d = attn_dims(cfg, ctx.tp_size)
     dh = d["dh"]
     g = lambda k: p[prefix + k] if prefix else p[k]
     B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
 
     h = common.norm(x, g("ln"), cfg.norm)
+    # block input crosses the die boundary (train/prefill gather it); the
+    # decode activation is replicated so the hop is a local roundtrip
+    h = boundary.wire_roundtrip(h, g("sp_in"), ctx.codec)
     wq = fsdp_gather(g("wq"), ctx, 0)
     q = h @ wq                                      # [B,1,Hq_loc*dh]
     if cfg.qkv_bias:
@@ -296,12 +303,11 @@ def attn_decode_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn",
         k_new = k_new.reshape(B, 1, d["Hkv_loc"], dh)
         v_new = v_new.reshape(B, 1, d["Hkv_loc"], dh)
         if cfg.rope_kind != "none":
-            pos_b = jnp.broadcast_to(pos[None, None], (B, 1))
             aux_d = dict(aux)
-            aux_d["positions"] = pos_b
+            aux_d["positions"] = pos[:, None]                     # [B,1]
             if cfg.rope_kind == "mrope":
                 aux_d["positions3"] = jnp.broadcast_to(
-                    pos[None, None, None], (3, B, 1))
+                    pos[None, :, None], (3, B, 1))
             q = _rope(cfg, q, aux_d)
             k_new = _rope(cfg, k_new, aux_d)
         # full q heads / kv heads on every rank
@@ -310,17 +316,20 @@ def attn_decode_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn",
         if not d["kv_rep"] and ctx.tp_size > 1:
             k_new = lax.all_gather(k_new, ctx.tp, axis=2, tiled=True)
             v_new = lax.all_gather(v_new, ctx.tp, axis=2, tiled=True)
-        # write into local cache shard if pos lands here
+        # per-slot cache write: each slot lands at its own position, and
+        # only on the cp shard that owns it (batched serving scatter)
         Ss = cache["k"].shape[1]
         off = cp_linear_index(ctx) * Ss
-        in_range = (pos >= off) & (pos < off + Ss)
-        loc = jnp.clip(pos - off, 0, Ss - 1)
-        k_cur = lax.dynamic_slice_in_dim(cache["k"], loc, 1, axis=1)
-        v_cur = lax.dynamic_slice_in_dim(cache["v"], loc, 1, axis=1)
-        k_w = jnp.where(in_range, k_new.astype(cache["k"].dtype), k_cur)
-        v_w = jnp.where(in_range, v_new.astype(cache["v"].dtype), v_cur)
-        cache = {"k": lax.dynamic_update_slice_in_dim(cache["k"], k_w, loc, 1),
-                 "v": lax.dynamic_update_slice_in_dim(cache["v"], v_w, loc, 1)}
+        in_range = (pos >= off) & (pos < off + Ss)               # [B]
+        loc = jnp.clip(pos - off, 0, Ss - 1)                     # [B]
+        bidx = jnp.arange(B)
+        k_cur = cache["k"][bidx, loc]                            # [B,Hkv,dh]
+        v_cur = cache["v"][bidx, loc]
+        sel = in_range[:, None, None]
+        k_w = jnp.where(sel, k_new[:, 0].astype(cache["k"].dtype), k_cur)
+        v_w = jnp.where(sel, v_new[:, 0].astype(cache["v"].dtype), v_cur)
+        cache = {"k": cache["k"].at[bidx, loc].set(k_w),
+                 "v": cache["v"].at[bidx, loc].set(v_w)}
     else:
         if ctx.tp_size > 1:
             q = lax.all_gather(q, ctx.tp, axis=2, tiled=True)
@@ -328,7 +337,7 @@ def attn_decode_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn",
     Ss = cache["k"].shape[1]
     off = cp_linear_index(ctx) * Ss
     window = cfg.window if kind == "local" else 0
-    eff_pos = pos if not is_cross else jnp.asarray(10 ** 9, jnp.int32)
+    eff_pos = pos if not is_cross else jnp.full((B,), 10 ** 9, jnp.int32)
     o, lse = common.decode_attention_partial(
         q[:, 0], cache["k"], cache["v"], pos=eff_pos, shard_offset=off,
         window=window, cap=cfg.attn_softcap)
@@ -339,7 +348,7 @@ def attn_decode_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn",
     o_loc = lax.dynamic_slice_in_dim(o, r * d["Hq_loc"], d["Hq_loc"], axis=1)
     wo = fsdp_gather(g("wo"), ctx, 1)
     part = o_loc.reshape(B, 1, d["Hq_loc"] * dh).astype(x.dtype) @ wo
-    y = lax.psum(part, ctx.tp)
+    y = boundary.coded_psum(part, g("sp_out"), ctx.codec, ctx.tp)
     if cfg.post_norm:
         y = common.norm(y, g("post_ln"), cfg.norm)
     return x + y, cache

@@ -160,6 +160,7 @@ def mlstm_decode_fwd(p, x, cache, pos, ctx: Context, aux):
     B = x.shape[0]
     dh = d["dh"]
     h_in = common.norm(x, p["ln"], cfg.norm)[:, 0]
+    h_in = boundary.wire_roundtrip(h_in, p["sp_in"], ctx.codec)
 
     wq = fsdp_gather(p["wq"], ctx, 0)
     wk = fsdp_gather(p["wk"], ctx, 0)
@@ -178,7 +179,7 @@ def mlstm_decode_fwd(p, x, cache, pos, ctx: Context, aux):
     og = jax.nn.sigmoid((h_in @ wg).astype(F32)).reshape(B, d["H_loc"], dh)
     y = (h * og).reshape(B, 1, d["H_loc"] * dh).astype(x.dtype)
     wo = fsdp_gather(p["wo"], ctx, 1)
-    out = lax.psum(y @ wo, ctx.tp)
+    out = boundary.coded_psum(y @ wo, p["sp_out"], ctx.codec, ctx.tp)
     return x + out, {"C": state[0], "n": state[1], "m": state[2]}
 
 
@@ -284,6 +285,7 @@ def slstm_decode_fwd(p, x, cache, pos, ctx: Context, aux):
     dh = d["dh"]
     B = x.shape[0]
     h_in = common.norm(x, p["ln"], cfg.norm)[:, 0]
+    h_in = boundary.wire_roundtrip(h_in, p["sp_in"], ctx.codec)
     wz = fsdp_gather(p["wz"], ctx, 0)
     wg = fsdp_gather(p["wgates"], ctx, 0)
     zx = (h_in @ wz).reshape(B, d["H_loc"], dh).astype(F32)
@@ -294,7 +296,7 @@ def slstm_decode_fwd(p, x, cache, pos, ctx: Context, aux):
                            p["r"].astype(F32))
     y = h.reshape(B, 1, d["H_loc"] * dh).astype(x.dtype)
     wo = fsdp_gather(p["wo"], ctx, 1)
-    out = lax.psum(y @ wo, ctx.tp)
+    out = boundary.coded_psum(y @ wo, p["sp_out"], ctx.codec, ctx.tp)
     return x + out, dict(zip(("c", "n", "h", "m"), state))
 
 
@@ -458,6 +460,7 @@ def rwkv_decode_fwd(p, x, cache, pos, ctx: Context, aux):
     B = x.shape[0]
 
     h = common.norm(x, p["ln1"], cfg.norm)[:, 0]
+    h = boundary.wire_roundtrip(h, p["sp_in"], ctx.codec)
     xp = cache["x_tm"].astype(F32)
     mk, mv, mr = p["mix_kvr"][0], p["mix_kvr"][1], p["mix_kvr"][2]
     mix = lambda m: (h.astype(F32) * m + xp * (1 - m)).astype(h.dtype)
@@ -473,9 +476,10 @@ def rwkv_decode_fwd(p, x, cache, pos, ctx: Context, aux):
     state, wkv = _wkv_step(state, (kt, vt, w, u))
     y = (rt * wkv)[:, None, :].astype(x.dtype)
     wo = fsdp_gather(p["wo_tm"], ctx, 1)
-    x = x + lax.psum(y @ wo, ctx.tp)
+    x = x + boundary.coded_psum(y @ wo, p["sp_out"], ctx.codec, ctx.tp)
 
     h2 = common.norm(x, p["ln2"], cfg.norm)[:, 0]
+    h2 = boundary.wire_roundtrip(h2, p["sp_in2"], ctx.codec)
     xp2 = cache["x_cm"].astype(F32)
     mk2, mr2 = p["mix_cm"][0], p["mix_cm"][1]
     mix2 = lambda m: (h2.astype(F32) * m + xp2 * (1 - m)).astype(h2.dtype)
@@ -484,8 +488,9 @@ def rwkv_decode_fwd(p, x, cache, pos, ctx: Context, aux):
     wv2 = fsdp_gather(p["wv_cm"], ctx, 1)
     kk = jnp.square(jax.nn.relu(mix2(mk2) @ wk2))
     rr = jax.nn.sigmoid((mix2(mr2) @ wr2).astype(F32)).astype(x.dtype)
-    y2 = rr[:, None, :] * lax.psum((kk @ wv2)[:, None, :], ctx.tp)
-    x = x + y2
+    out2 = boundary.coded_psum((kk @ wv2)[:, None, :], p["sp_out2"],
+                               ctx.codec, ctx.tp)
+    x = x + rr[:, None, :] * out2
     new_cache = {"x_tm": h.astype(cache["x_tm"].dtype),
                  "x_cm": h2.astype(cache["x_cm"].dtype),
                  "aa": state[0], "bb": state[1], "pp": state[2]}

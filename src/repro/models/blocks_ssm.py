@@ -161,6 +161,7 @@ def mamba_decode_fwd(p, x, cache, pos, ctx: Context, aux):
     d = ssm_dims(cfg, ctx.tp_size)
     B = x.shape[0]
     h = common.norm(x, p["ln"], cfg.norm)[:, 0]     # [B, D]
+    h = boundary.wire_roundtrip(h, p["sp_in"], ctx.codec)
 
     wi = fsdp_gather(p["wi"], ctx, 0)
     xz = h @ wi
@@ -188,7 +189,8 @@ def mamba_decode_fwd(p, x, cache, pos, ctx: Context, aux):
     y = (y * jax.nn.silu(z.astype(F32))).astype(x.dtype)
 
     wo = fsdp_gather(p["wo"], ctx, 1)
-    out = lax.psum(y[:, None, :] @ wo, ctx.tp)
+    out = boundary.coded_psum(y[:, None, :] @ wo, p["sp_out"], ctx.codec,
+                              ctx.tp)
     cache = {"conv": new_conv, "ssm": h_new}
     return x + out, cache
 

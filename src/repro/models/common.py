@@ -181,9 +181,10 @@ def decode_attention_partial(q, k_shard, v_shard, *, pos, shard_offset,
     """One decode step over a *sequence shard* of the KV cache.
 
     q [B, Hq, dh]; k_shard/v_shard [B, Ss, Hkv, dh]; pos: current absolute
-    position (scalar); shard_offset: absolute position of this shard's
-    first cache slot.  Returns (out [B, Hq, dh] — unnormalized partial,
-    lse [B, Hq]) for cross-shard LSE combination.
+    position (scalar, or [B] per-slot positions for batched serving);
+    shard_offset: absolute position of this shard's first cache slot.
+    Returns (out [B, Hq, dh] — unnormalized partial, lse [B, Hq]) for
+    cross-shard LSE combination.
     """
     B, Hq, dh = q.shape
     _, Ss, Hkv, _ = k_shard.shape
@@ -197,9 +198,13 @@ def decode_attention_partial(q, k_shard, v_shard, *, pos, shard_offset,
     s = jnp.einsum("bhd,bkhd->bhk", q.astype(F32), kb) * scale
     s = softcap(s, cap)
     k_pos = shard_offset + jnp.arange(Ss)
-    mask = k_pos[None, None, :] <= pos
+    posb = jnp.asarray(pos)
+    if posb.ndim == 0:
+        posb = jnp.broadcast_to(posb, (B,))
+    posb = posb[:, None, None]                       # [B,1,1]
+    mask = k_pos[None, None, :] <= posb
     if window:
-        mask &= (pos - k_pos[None, None, :]) < window
+        mask &= (posb - k_pos[None, None, :]) < window
     s = jnp.where(mask, s, -1e30)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])

@@ -464,8 +464,15 @@ def forward_loss(params, batch, ctx: Context):
     return loss / ctx.dp_size, metrics
 
 
-def forward_prefill(params, batch, ctx: Context):
-    """Prefill: fill caches, return last-token logits + caches."""
+def forward_prefill(params, batch, ctx: Context, last_pos=None):
+    """Prefill: fill caches, return last-token logits + caches.
+
+    ``last_pos`` (optional, scalar or [B] int32): per-sequence index of
+    the last *real* prompt token when prompts are right-padded into a
+    fixed-length prefill (the serving engine's admit path).  Defaults to
+    the final position.  When set, the selected hidden crosses the wire
+    through the sp_head codec so its logits match the decode path.
+    """
     cfg = ctx.cfg
     ctx = ctx.with_(mode="prefill")
     aux = _make_aux(batch, ctx)
@@ -480,7 +487,23 @@ def forward_prefill(params, batch, ctx: Context):
     # only the last position's logits are needed: slice before the head
     # matmul so the [B, S, V] logits tensor never exists
     last = common.norm(x, params["final_ln"], cfg.norm)
-    if ctx.tp_size > 1:
+    B, S_loc, _ = last.shape
+    if last_pos is not None:
+        lp = jnp.broadcast_to(jnp.asarray(last_pos, jnp.int32).reshape(-1),
+                              (B,))
+        lidx = lp % S_loc
+        cand = jnp.take_along_axis(last, lidx[:, None, None], axis=1)[:, 0]
+        if ctx.tp_size > 1:
+            r = lax.axis_index(ctx.tp)
+            own = (lp // S_loc == r)[:, None]
+            part = jnp.where(own, cand, 0).astype(cfg.dtype)
+            # only the owning rank contributes: the coded psum reduces to
+            # the sp_head wire roundtrip the decode path applies
+            xg_last = boundary.coded_psum(part, params["sp_head"],
+                                          ctx.codec, ctx.tp)
+        else:
+            xg_last = cand
+    elif ctx.tp_size > 1:
         # global last token lives on the last tp rank's local tail
         alll = lax.all_gather(last[:, -1], ctx.tp, axis=1)   # [B, tp, D]
         xg_last = alll[:, -1]
@@ -493,12 +516,17 @@ def forward_prefill(params, batch, ctx: Context):
 
 
 def forward_decode(params, cache, token, pos, ctx: Context, aux_extra=None):
-    """One decode step.  token [B_loc] int32; pos scalar int32.
+    """One decode step.  token [B_loc] int32; pos scalar int32 or
+    [B_loc] per-slot positions (batched serving).
     Returns (logits_local [B_loc, V_loc], new_cache)."""
     cfg = ctx.cfg
     ctx = ctx.with_(mode="decode")
     aux = dict(aux_extra or {})
-    # embed: replicated lookup (token ids replicated over tp)
+    B = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    # embed: vocab is tp-sharded; exactly one rank contributes per token,
+    # summed over the coded wire (same boundary as the train-path
+    # psum_scatter, minus the seq scatter)
     emb = fsdp_gather(params["embed"], ctx, 1)
     tp = ctx.tp_size
     if tp == 1:
@@ -510,7 +538,9 @@ def forward_decode(params, cache, token, pos, ctx: Context, aux_extra=None):
         loc = jnp.clip(token - off, 0, V_loc - 1)
         part = jnp.take(emb, loc, axis=0)
         valid = ((token >= off) & (token < off + V_loc))[:, None]
-        x = lax.psum(jnp.where(valid, part, 0), ctx.tp)[:, None, :]
+        part = jnp.where(valid, part, 0).astype(cfg.dtype)
+        x = boundary.coded_psum(part, params["sp_embed"], ctx.codec,
+                                ctx.tp)[:, None, :]
     x = x.astype(cfg.dtype)
 
     def body(carry, slc):
@@ -528,6 +558,10 @@ def forward_decode(params, cache, token, pos, ctx: Context, aux_extra=None):
         x, new_cache = lax.scan(body, x, (params["units"], cross, cache))
 
     h = common.norm(x, params["final_ln"], cfg.norm)
+    if ctx.tp_size > 1:
+        # hidden->head die crossing: train/prefill gather h through the
+        # sp_head codec, so serving applies the same wire roundtrip
+        h = boundary.wire_roundtrip(h, params["sp_head"], ctx.codec)
     head = _head_w(params, ctx)
     logits = (h[:, 0] @ head).astype(F32)
     if cfg.final_softcap:

@@ -1,0 +1,9 @@
+"""Batched serving: continuous batching, paged KV, on-device sampling."""
+from .engine import (EngineConfig, Request, ServingEngine,
+                     make_engine_decode_step, make_engine_prefill_step)
+from .kv_cache import PagedKVCache, SlotAllocator
+from .sampling import SamplingConfig, sample
+
+__all__ = ["EngineConfig", "Request", "ServingEngine", "PagedKVCache",
+           "SlotAllocator", "SamplingConfig", "sample",
+           "make_engine_decode_step", "make_engine_prefill_step"]

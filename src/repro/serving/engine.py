@@ -1,0 +1,310 @@
+"""Continuous-batching serving engine over the spike-coded decode path.
+
+One ``ServingEngine`` owns a fixed pool of request slots (the decode
+batch), a slot-major ``PagedKVCache``, and three compiled programs:
+
+  prefill : B=1, fixed-length right-padded prompt -> slot-shaped cache
+            + the first sampled token (logits taken at the true last
+            prompt position via ``last_pos``)
+  insert  : splice the prefilled cache into a free slot (donated)
+  decode  : ONE step for ALL slots at once — per-slot positions,
+            per-slot temperatures, fused distributed sampling — with the
+            cache donated so serving is allocation-free at steady state
+
+Scheduling is classic continuous batching: every ``step()`` first admits
+queued requests into free slots (prefill-then-decode interleaving), then
+runs a single batched decode step; finished requests (max tokens, EOS,
+or context full) retire immediately and their slot returns to the free
+list for the next admit.
+
+Every decode-path activation collective carries the spike/int8 wire
+(``repro.core.boundary.coded_psum`` / ``wire_roundtrip``); the only fp
+collectives left on the step are head-space layout exchanges (q/kv head
+gathers) and the flash-decode LSE combine, which carry O(heads) metadata
+rather than D-space activations.
+
+All per-slot computation is batch-independent — no reduction mixes
+slots, int8 scales are per-token — so under greedy decoding a slot's
+token stream is bit-identical whether it shares the batch with 0 or
+``num_slots-1`` neighbours (asserted by tests/dist_scenarios.py
+``serving_parity``).  Stochastic sampling is per-slot independent in
+distribution, but draws its Gumbel noise from the slot row and the
+engine's step counter, so sampled streams are reproducible only for a
+fixed schedule, not across different batch compositions.
+
+Correctness note on padded prefill: right-padding is exact for
+attention-family models (pad KV beyond ``last_pos`` is masked by the
+per-slot position and overwritten as decode advances).  Families with
+recurrent state (ssm/rnn/hybrid) fold pad tokens into the prefill-final
+state, so their prompts must arrive at exactly ``prefill_len`` tokens;
+the engine enforces this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ShapeCell
+from ..launch.serve import strip_dp_specs
+from ..launch.specs import (cache_specs, make_context, make_plan,
+                            serve_decode_input_specs)
+from ..launch.train import shard_params_specs
+from ..models import model as M
+from . import sampling
+from .kv_cache import PagedKVCache
+from .sampling import SamplingConfig
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request."""
+
+    rid: int
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_slots: int = 4
+    max_seq: int = 128
+    prefill_len: int = 0           # 0 -> max_seq
+    page_size: int = 64
+    top_k: int = 0
+    top_p: float = 0.0
+    eos_id: Optional[int] = None
+    replicate_weights: bool = False
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    out: list
+
+
+def make_engine_prefill_step(cfg, plan, mesh, scfg: SamplingConfig,
+                             replicate_weights=False):
+    """prefill(params, tokens[1,S], last_pos[1], temp[1], key) ->
+    (first_token [1], cache)."""
+    _, pspecs, _ = shard_params_specs(cfg, plan)
+    ctx = make_context(plan, "prefill")
+    if replicate_weights:
+        pspecs = strip_dp_specs(pspecs)
+        ctx = ctx.with_(dp_size=1)
+    _, cspecs = cache_specs(plan)
+
+    def step(params, tokens, last_pos, temp, key):
+        logits, caches = M.forward_prefill(params, {"tokens": tokens}, ctx,
+                                           last_pos=last_pos)
+        tok = sampling.sample(logits, key, temp, tp=ctx.tp,
+                              tp_size=ctx.tp_size, cfg=scfg)
+        return tok, caches
+
+    fn = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(pspecs, P(None, plan.tp), P(None), P(None), P()),
+        out_specs=(P(None), cspecs), check_vma=False)
+    return jax.jit(fn)
+
+
+def make_engine_decode_step(cfg, plan, mesh, scfg: SamplingConfig,
+                            replicate_weights=False):
+    """decode(params, cache, token[B], pos[B], temp[B], key) ->
+    (next_token [B], cache) — cache donated."""
+    _, pspecs, _ = shard_params_specs(cfg, plan)
+    ctx = make_context(plan, "decode")
+    if replicate_weights:
+        pspecs = strip_dp_specs(pspecs)
+        ctx = ctx.with_(dp_size=1)
+    _, ispecs = serve_decode_input_specs(plan)
+
+    def step(params, cache, token, pos, temp, key):
+        logits, cache = M.forward_decode(params, cache, token, pos, ctx)
+        tok = sampling.sample(logits, key, temp, tp=ctx.tp,
+                              tp_size=ctx.tp_size, cfg=scfg)
+        return tok, cache
+
+    fn = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(pspecs, ispecs["cache"], ispecs["token"], ispecs["pos"],
+                  ispecs["temp"], ispecs["key"]),
+        out_specs=(ispecs["token"], ispecs["cache"]), check_vma=False)
+    return jax.jit(fn, donate_argnums=(1,))
+
+
+_RECURRENT_CACHE_KEYS = ("ssm_state", "rnn_state", "rwkv_state")
+
+
+class ServingEngine:
+    """Batched continuous-batching decode over a slot pool."""
+
+    def __init__(self, cfg, mesh, params, ecfg: EngineConfig):
+        assert not cfg.is_encdec, "encoder-decoder serving: follow-on"
+        self.cfg, self.mesh, self.params, self.ecfg = cfg, mesh, params, ecfg
+        prefill_len = ecfg.prefill_len or ecfg.max_seq
+        cell_dec = ShapeCell("serve_decode", ecfg.max_seq, ecfg.num_slots,
+                             "decode")
+        self.plan = make_plan(cfg, cell_dec, mesh)
+        assert self.plan.batch_sharded, (
+            f"num_slots={ecfg.num_slots} must divide over the data axes "
+            f"(dp_size={self.plan.dp_size})")
+        assert ecfg.max_seq % self.plan.tp_size == 0
+        assert prefill_len % self.plan.tp_size == 0
+        cell_pre = ShapeCell("serve_admit", prefill_len, 1, "prefill")
+        self.plan_pre = make_plan(cfg, cell_pre, mesh)
+        self.prefill_len = prefill_len
+        self._has_state = any(
+            k in _RECURRENT_CACHE_KEYS
+            for pos in cache_specs(self.plan)[0].values() for k in pos)
+
+        scfg = SamplingConfig(top_k=ecfg.top_k, top_p=ecfg.top_p)
+        self._prefill = make_engine_prefill_step(
+            cfg, self.plan_pre, mesh, scfg, ecfg.replicate_weights)
+        self._decode = make_engine_decode_step(
+            cfg, self.plan, mesh, scfg, ecfg.replicate_weights)
+        self.cache = PagedKVCache(self.plan, self.plan_pre, mesh,
+                                  ecfg.page_size)
+
+        n = ecfg.num_slots
+        self._tokens = np.zeros(n, np.int32)
+        self._pos = np.zeros(n, np.int32)
+        self._temp = np.zeros(n, np.float32)
+        self._slots: list[Optional[_Slot]] = [None] * n
+        self._queue: deque[Request] = deque()
+        self._key = jax.random.PRNGKey(ecfg.seed)
+        self._tick = 0
+        self.tokens_generated = 0
+        self.decode_steps = 0
+
+    # -- request lifecycle -------------------------------------------------
+
+    def submit(self, req: Request):
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (admit always "
+                             "samples one token from the prefill logits)")
+        P_len = len(req.prompt)
+        if not 0 < P_len <= self.prefill_len:
+            raise ValueError(
+                f"prompt len {P_len} not in (0, {self.prefill_len}]")
+        if self._has_state and P_len != self.prefill_len:
+            raise ValueError(
+                "recurrent-state families need prompt_len == prefill_len "
+                f"({self.prefill_len}); right-padding would corrupt the "
+                "prefill-final state")
+        self._queue.append(req)
+
+    def _next_key(self):
+        self._tick += 1
+        return jax.random.fold_in(self._key, self._tick)
+
+    def _admit(self, req: Request, finished: list):
+        P_len = len(req.prompt)
+        toks = np.zeros((1, self.prefill_len), np.int32)
+        toks[0, :P_len] = np.asarray(req.prompt, np.int32)
+        first, pre_cache = self._prefill(
+            self.params, toks, np.array([P_len - 1], np.int32),
+            np.array([req.temperature], np.float32), self._next_key())
+        # occupancy counts cache positions written: the prompt now, the
+        # generated tokens as each decode step lands them (extend below)
+        slot = self.cache.admit(pre_cache, P_len)
+        first = int(np.asarray(first)[0])
+        self._slots[slot] = _Slot(req, [first])
+        self._tokens[slot] = first
+        self._pos[slot] = P_len
+        self._temp[slot] = req.temperature
+        self.tokens_generated += 1
+        self._maybe_retire(slot, first, finished)
+
+    def _maybe_retire(self, slot: int, tok: int, finished: list):
+        st = self._slots[slot]
+        done = (len(st.out) >= st.req.max_new_tokens
+                or (self.ecfg.eos_id is not None and tok == self.ecfg.eos_id)
+                or self._pos[slot] >= self.ecfg.max_seq)
+        if done:
+            self.cache.evict(slot)
+            self._slots[slot] = None
+            finished.append((st.req, st.out))
+
+    # -- scheduling --------------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and self.num_active == 0
+
+    def step(self) -> list:
+        """Admit what fits, then one batched decode step.  Returns the
+        requests finished this step as (request, tokens) pairs."""
+        finished: list = []
+        while self._queue and self.cache.allocator.num_free:
+            self._admit(self._queue.popleft(), finished)
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return finished
+        nxt, self.cache.buffers = self._decode(
+            self.params, self.cache.buffers, self._tokens, self._pos,
+            self._temp, self._next_key())
+        nxt = np.asarray(nxt)
+        self.decode_steps += 1
+        for i in active:
+            tok = int(nxt[i])
+            self._slots[i].out.append(tok)
+            self._tokens[i] = tok
+            self._pos[i] += 1
+            self.cache.allocator.extend(i)
+            self.tokens_generated += 1
+            self._maybe_retire(i, tok, finished)
+        return finished
+
+    def run(self, requests: Sequence[Request], max_steps: int = 100000):
+        """Serve ``requests`` to completion; {rid: generated tokens}."""
+        for r in requests:
+            self.submit(r)
+        results = {}
+        for _ in range(max_steps):
+            for req, out in self.step():
+                results[req.rid] = out
+            if self.idle:
+                break
+        assert self.idle, "ran out of steps"
+        return results
+
+    def warmup(self, prompt: Sequence[int]):
+        """Compile the prefill/insert/decode programs off the clock by
+        serving one throwaway request, then zero the throughput stats."""
+        self.run([Request(rid=-1, prompt=prompt, max_new_tokens=2)])
+        self.reset_stats()
+
+    def reset_stats(self):
+        self.tokens_generated = 0
+        self.decode_steps = 0
+
+    # -- introspection -----------------------------------------------------
+
+    def decode_wire_stats(self):
+        """Parse the compiled batched decode step's collectives.
+
+        Returns (CollectiveStats, wire_bytes_per_token): per-device ICI
+        bytes of ONE decode step, scaled to total bytes per generated
+        token across the mesh.
+        """
+        from ..launch import roofline as RL
+        ins, _ = serve_decode_input_specs(self.plan)
+        lowered = self._decode.lower(
+            self.params, self.cache.buffers, ins["token"], ins["pos"],
+            ins["temp"], ins["key"])
+        stats = RL.parse_collectives(lowered.compile().as_text())
+        ndev = self.plan.dp_size * self.plan.tp_size
+        per_tok = stats.wire_bytes * ndev / self.ecfg.num_slots
+        return stats, per_tok

@@ -1,0 +1,184 @@
+"""Paged/slotted KV-and-state cache for the batched serving engine.
+
+Device layout is slot-major: every cache leaf carries the full slot
+batch — attention KV ``[U, slots, S_max, Hkv, dh]`` seq-sharded over the
+context-parallel axes, recurrent state (SSM / xLSTM / RWKV) ``[U, slots,
+...]`` — allocated once at engine start and donated through every decode
+step, so serving runs at constant memory with zero per-request
+allocation.
+
+The host side is a ``SlotAllocator``: a free-list of request slots plus
+page-granular occupancy accounting (``page_size`` positions per page).
+Pages are an accounting/scheduling granularity — the device tensors are
+slot-granular; true block-table indirection inside the attention kernel
+is a follow-on (ROADMAP §Serving).
+
+``insert`` splices a freshly prefilled single-request cache into a slot
+in place (donated buffers): state leaves are a slot-row write; KV leaves
+additionally re-align the prefill's seq sharding onto the decode cache's
+when the prefill length is shorter than ``max_seq`` (an all_gather of
+the one request's KV over the cp axis — the natural admit cost).
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..launch.specs import CellPlan, cache_specs
+
+_KV_KEYS = ("kv", "cross_kv")
+
+
+class SlotAllocator:
+    """Free-list slot allocation + page-granular occupancy accounting."""
+
+    def __init__(self, num_slots: int, max_seq: int, page_size: int = 64):
+        assert num_slots > 0 and page_size > 0
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.pages_per_slot = -(-max_seq // page_size)
+        self._free = deque(range(num_slots))
+        self._len = np.zeros(num_slots, np.int64)   # current seq occupancy
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, seq_len: int) -> int:
+        """Claim a slot for a request currently holding ``seq_len`` tokens."""
+        if not self._free:
+            raise RuntimeError("no free slots")
+        if not 0 < seq_len <= self.max_seq:
+            raise ValueError(f"seq_len {seq_len} not in (0, {self.max_seq}]")
+        slot = self._free.popleft()
+        self._len[slot] = seq_len
+        return slot
+
+    def extend(self, slot: int, n: int = 1):
+        self._len[slot] = min(self._len[slot] + n, self.max_seq)
+
+    def free(self, slot: int):
+        assert self._len[slot] > 0, f"slot {slot} already free"
+        self._len[slot] = 0
+        self._free.append(slot)
+
+    def pages_used(self, slot: int) -> int:
+        return int(-(-self._len[slot] // self.page_size))
+
+    @property
+    def total_pages(self) -> int:
+        return self.num_slots * self.pages_per_slot
+
+    @property
+    def pages_in_use(self) -> int:
+        return int(sum(self.pages_used(s) for s in range(self.num_slots)))
+
+
+def _is_kv_path(path) -> bool:
+    return any(getattr(p, "key", None) in _KV_KEYS for p in path)
+
+
+def _init_leaf(path, s):
+    # rwkv's log-space max-tracker must start at -inf, everything else 0
+    if any(getattr(p, "key", None) == "pp" for p in path):
+        return jnp.full(s.shape, -1e30, s.dtype)
+    return jnp.zeros(s.shape, s.dtype)
+
+
+def make_init_fn(plan: CellPlan, mesh):
+    """Build the zeroed slot-major cache, sharded per the decode plan."""
+    structs, specs = cache_specs(plan)
+    shardings = jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+
+    def init():
+        return jax.tree_util.tree_map_with_path(
+            _init_leaf, structs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    return jax.jit(init, out_shardings=shardings)
+
+
+def make_insert_fn(plan: CellPlan, plan_pre: CellPlan, mesh):
+    """insert(cache, pre_cache, slot) -> cache (donated, in place).
+
+    ``pre_cache`` is the B=1 cache returned by the engine prefill step
+    (seq length ``plan_pre.cell.seq_len``); ``slot`` a replicated int32.
+    """
+    assert plan.cp == (plan.tp,) and plan_pre.cp == (plan_pre.tp,), (
+        "engine admit requires tp-only context parallelism on both the "
+        "prefill and decode plans")
+    _, cspecs = cache_specs(plan)
+    _, pspecs = cache_specs(plan_pre)
+    num_slots = plan.cell.global_batch
+    dp_size = plan.dp_size if plan.batch_sharded else 1
+    slots_loc = num_slots // dp_size
+    S_pre = plan_pre.cell.seq_len
+    S_max = plan.cell.seq_len
+    tp = plan.tp
+
+    def ins(cache, pre, slot):
+        if dp_size > 1:
+            r_dp = jnp.zeros((), jnp.int32)
+            for a in plan.dp:
+                r_dp = r_dp * lax.axis_size(a) + lax.axis_index(a)
+        else:
+            r_dp = jnp.zeros((), jnp.int32)
+        own = (slot >= r_dp * slots_loc) & (slot < (r_dp + 1) * slots_loc)
+        ls = jnp.clip(slot - r_dp * slots_loc, 0, slots_loc - 1)
+
+        def merge(path, c, p):
+            p0 = p[:, 0]                              # drop the B=1 dim
+            cur = lax.dynamic_index_in_dim(c, ls, axis=1, keepdims=False)
+            if _is_kv_path(path) and S_pre != S_max:
+                # prefill KV is seq-sharded at S_pre granularity; gather
+                # the single request's KV and re-slice at S_max granularity
+                full = lax.all_gather(p0, tp, axis=1, tiled=True)
+                Ls = c.shape[2]
+                gpos = lax.axis_index(tp) * Ls + jnp.arange(Ls)
+                src = jnp.take(full, jnp.minimum(gpos, S_pre - 1), axis=1)
+                valid = (gpos < S_pre)[None, :, None, None]
+                row = jnp.where(own & valid, src.astype(c.dtype), cur)
+            else:
+                row = jnp.where(own, p0.astype(c.dtype), cur)
+            return c.at[:, ls].set(row)
+
+        return jax.tree_util.tree_map_with_path(merge, cache, pre)
+
+    fn = jax.shard_map(ins, mesh=mesh, in_specs=(cspecs, pspecs, P()),
+                       out_specs=cspecs, check_vma=False)
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+class PagedKVCache:
+    """Slot-major device cache + host-side slot/page allocator."""
+
+    def __init__(self, plan: CellPlan, plan_pre: CellPlan, mesh,
+                 page_size: int = 64):
+        self.plan = plan
+        self.allocator = SlotAllocator(plan.cell.global_batch,
+                                       plan.cell.seq_len, page_size)
+        self.buffers = make_init_fn(plan, mesh)()
+        self._insert = make_insert_fn(plan, plan_pre, mesh)
+
+    def admit(self, pre_cache, seq_len: int) -> int:
+        """Allocate a slot and splice a prefilled cache into it."""
+        slot = self.allocator.alloc(seq_len)
+        self.buffers = self._insert(self.buffers, pre_cache,
+                                    jnp.asarray(slot, jnp.int32))
+        return slot
+
+    def evict(self, slot: int):
+        self.allocator.free(slot)
+
+    def bytes_per_slot(self) -> int:
+        per = 0
+        for leaf in jax.tree.leaves(self.buffers):
+            per += leaf.nbytes // leaf.shape[1]
+        return per

@@ -3,8 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _hyp import given, settings, st  # optional hypothesis (skips without)
 from repro.core import spike
 from repro.kernels import ops, ref
 

@@ -1,0 +1,109 @@
+"""Serving engine tests: host-side scheduling logic in-process, model
+parity + distributed sampling in 8-device subprocesses (see
+dist_scenarios.py for why multi-device runs out-of-process)."""
+import numpy as np
+import pytest
+
+from test_distributed import run
+
+
+# ---------------------------------------------------------------------------
+# host-side slot/page allocator (no devices involved)
+# ---------------------------------------------------------------------------
+
+
+def test_slot_allocator_reuse_and_pages():
+    from repro.serving import SlotAllocator
+    a = SlotAllocator(num_slots=3, max_seq=64, page_size=16)
+    assert a.num_free == 3 and a.total_pages == 12
+    s0 = a.alloc(17)                      # 2 pages
+    s1 = a.alloc(64)                      # 4 pages
+    assert {s0, s1} == {0, 1}
+    assert a.pages_used(s0) == 2 and a.pages_used(s1) == 4
+    assert a.pages_in_use == 6
+    a.extend(s0, 15)                      # 32 tokens -> still 2 pages
+    assert a.pages_used(s0) == 2
+    a.extend(s0, 1)                       # 33 tokens -> 3 pages
+    assert a.pages_used(s0) == 3
+    a.free(s1)
+    assert a.num_free == 2 and a.pages_in_use == 3
+    s2 = a.alloc(1)
+    assert s2 == 2                        # FIFO free list
+    a.free(s0)
+    a.free(s2)
+    s3 = a.alloc(5)
+    assert s3 == s1                       # freed slot recycled
+    with pytest.raises(ValueError):
+        a.alloc(65)
+    a.alloc(64)
+    a.alloc(64)
+    with pytest.raises(RuntimeError):     # pool exhausted
+        a.alloc(1)
+
+
+def test_slot_allocator_rejects_double_free():
+    from repro.serving import SlotAllocator
+    a = SlotAllocator(2, 8, 4)
+    s = a.alloc(4)
+    a.free(s)
+    with pytest.raises(AssertionError):
+        a.free(s)
+
+
+# ---------------------------------------------------------------------------
+# sampling, single-device path (tp_size == 1: pure local math)
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_single_device_greedy_topk_topp():
+    import jax
+    import jax.numpy as jnp
+    from repro.serving.sampling import SamplingConfig, sample
+    B, V = 8, 128
+    logits = jax.random.normal(jax.random.PRNGKey(0), (B, V)) * 3.0
+    key = jax.random.PRNGKey(3)
+    zero = jnp.zeros(B, jnp.float32)
+
+    tok = np.asarray(sample(logits, key, zero, tp=None, tp_size=1))
+    np.testing.assert_array_equal(tok, np.asarray(logits).argmax(-1))
+
+    # temps mix greedy + stochastic per slot in one call
+    temps = jnp.asarray([0.0, 1.0] * (B // 2), jnp.float32)
+    k = 4
+    topk = np.argsort(np.asarray(logits), -1)[:, -k:]
+    tok = np.asarray(sample(logits, key, temps, tp=None, tp_size=1,
+                            cfg=SamplingConfig(top_k=k)))
+    for b in range(B):
+        if temps[b] == 0:
+            assert tok[b] == np.asarray(logits)[b].argmax()
+        else:
+            assert tok[b] in topk[b]
+
+    p = 0.5
+    pr = np.asarray(jax.nn.softmax(logits.astype(jnp.float32), -1))
+    order = np.argsort(-pr, -1)
+    csum = np.cumsum(np.take_along_axis(pr, order, -1), -1)
+    for s in range(3):
+        tok = np.asarray(sample(logits, jax.random.PRNGKey(s),
+                                jnp.ones(B, jnp.float32), tp=None,
+                                tp_size=1, cfg=SamplingConfig(top_p=p)))
+        for b in range(B):
+            nucleus = set(order[b, :int((csum[b] < p).sum()) + 1])
+            assert tok[b] in nucleus
+
+
+# ---------------------------------------------------------------------------
+# multi-device engine parity (subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_matches_single_request_and_teacher_forced():
+    """Prefill->decode parity: N-step batched engine decode (6 requests
+    over 4 slots) equals the single-request run AND the teacher-forced
+    forward argmax, across `none` and `spike_fused` boundary modes."""
+    out = run("serving_parity")
+    assert out.count("serving parity OK") == 2
+
+
+def test_distributed_sampling_matches_host():
+    run("serving_sampling")

@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional hypothesis (skips without)
 
 from repro.sim.noc import NocConfig, NocSim, PAPER_MODELS, fc
 
