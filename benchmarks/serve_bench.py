@@ -12,7 +12,14 @@ headline serving-side artifact of the paper: the spike codec shrinks
 the per-token die-to-die traffic while the scheduler keeps every slot
 busy.
 
+With ``--spec-k K`` the engine runs self-drafting speculative decoding
+and the report adds the verify-step wire bytes per committed token plus
+the mean accepted draft length: the verify step multiplies the
+decode-boundary traffic by K+1, which is exactly the term the coded
+wire absorbs (vwireKB/tok already divides by the measured acceptance).
+
     PYTHONPATH=src python benchmarks/serve_bench.py [--mesh 1x2]
+    PYTHONPATH=src python benchmarks/serve_bench.py --spec-k 3
 """
 from __future__ import annotations
 
@@ -33,6 +40,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--codecs", default=",".join(CODECS))
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative draft tokens per verify step")
+    ap.add_argument("--repetitive", action="store_true",
+                    help="cyclic prompts (the drafter's best case)")
     args = ap.parse_args()
 
     dp, tp = (int(x) for x in args.mesh.split("x"))
@@ -53,8 +64,14 @@ def main():
     mesh = make_mesh((dp, tp), ("data", "model"))
     max_seq = args.prompt_len + args.gen
     rng = np.random.RandomState(0)
-    prompts = [list(rng.randint(0, 256, args.prompt_len))
-               for _ in range(args.requests)]
+    if args.repetitive:
+        period = max(args.prompt_len // 4, 1)
+        prompts = [(list(rng.randint(0, 256, period))
+                    * args.prompt_len)[:args.prompt_len]
+                   for _ in range(args.requests)]
+    else:
+        prompts = [list(rng.randint(0, 256, args.prompt_len))
+                   for _ in range(args.requests)]
 
     baseline_tokens = None
     for codec in args.codecs.split(","):
@@ -62,7 +79,8 @@ def main():
         cfg = reduced(get_config(args.arch, hnn_mode=hnn)).replace(
             codec=codec)
         ecfg = EngineConfig(num_slots=args.slots, max_seq=max_seq,
-                            prefill_len=args.prompt_len)
+                            prefill_len=args.prompt_len,
+                            spec_k=args.spec_k)
         cell = ShapeCell("serve_decode", max_seq, args.slots, "decode")
         plan = SP.make_plan(cfg, cell, mesh)
         params = TR.init_sharded_params(cfg, plan, mesh,
@@ -85,9 +103,15 @@ def main():
             "us_per_token not comparable across codecs")
         _, per_tok = engine.decode_wire_stats()
         us_per_tok = dt / toks * 1e6
+        extra = ""
+        if engine.spec_k > 0:
+            mal = engine.mean_accepted_len
+            _, vper_tok = engine.verify_wire_stats(mal)
+            extra = (f" spec_k={engine.spec_k} accepted={mal:.2f} "
+                     f"vwireKB/tok={vper_tok/1e3:.2f}")
         print(f"serve/{codec},{us_per_tok:.1f},"
               f"tok/s={toks/dt:.1f} wireKB/tok={per_tok/1e3:.2f} "
-              f"steps={engine.decode_steps} slots={args.slots}")
+              f"steps={engine.decode_steps} slots={args.slots}{extra}")
     return 0
 
 

@@ -201,3 +201,35 @@ def serve_decode_input_specs(plan: CellPlan):
     specs = {"cache": cache_sp, "token": P(bs), "pos": P(bs),
              "temp": P(bs), "key": P()}
     return inputs, specs
+
+
+def verify_shape_cell(max_seq: int, num_slots: int, spec_k: int) -> ShapeCell:
+    """Shape cell for the speculative k-token verify program.
+
+    Same (seq_len, batch, kind) footprint as the decode cell — the verify
+    step reads/writes the same slot-major cache — but named per ``spec_k``
+    so dry-run/roofline tables key the two compiled programs apart.
+    """
+    return ShapeCell(f"serve_verify_k{spec_k}", max_seq, num_slots, "decode")
+
+
+def serve_verify_input_specs(plan: CellPlan, spec_k: int):
+    """(inputs, specs) for one batched speculative-verify step.
+
+    Like ``serve_decode_input_specs`` but with K1 = spec_k+1 token
+    columns per slot (last committed token + spec_k draft tokens) and a
+    per-slot *base* position; the sampled-output token block is [B, K1].
+    """
+    cfg, cell = plan.cfg, plan.cell
+    B = cell.global_batch
+    bs = _bspec(plan)
+    cache, cache_sp = cache_specs(plan)
+    K1 = spec_k + 1
+    inputs = {"cache": cache,
+              "token": jax.ShapeDtypeStruct((B, K1), jnp.int32),
+              "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+              "temp": jax.ShapeDtypeStruct((B,), jnp.float32),
+              "key": jax.ShapeDtypeStruct((2,), jnp.uint32)}
+    specs = {"cache": cache_sp, "token": P(bs, None), "pos": P(bs),
+             "temp": P(bs), "key": P()}
+    return inputs, specs

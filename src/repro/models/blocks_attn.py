@@ -352,3 +352,93 @@ def attn_decode_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn",
     if cfg.post_norm:
         y = common.norm(y, g("post_ln"), cfg.norm)
     return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# forward: speculative verify (K1 = spec_k+1 tokens, context-parallel KV)
+# ---------------------------------------------------------------------------
+
+
+def attn_verify_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn"):
+    """Batched k-token verify: x [B, K1, D] replicated over tp — the last
+    committed token followed by spec_k draft tokens per slot; cache {k,v}
+    [B, Ss, Hkv, dh] seq-sharded over ctx.cp; pos [B] per-slot *base*
+    positions (query j sits at pos+j).
+
+    Every per-token op is shared with ``attn_decode_fwd`` (same norms,
+    same ``wire_roundtrip`` spike boundary, same projections), so under
+    greedy decoding the verify logits at position j with an all-correct
+    draft prefix are bit-identical to j vanilla decode steps.  KV for
+    all K1 positions lands in the cache before attention; rejected-draft
+    entries are dead by masking (never attended: the committed position
+    stays behind them) and are overwritten by the next verify window.
+    Returns (x', cache')."""
+    cfg = ctx.cfg
+    d = attn_dims(cfg, ctx.tp_size)
+    dh = d["dh"]
+    B, K1, _ = x.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    qpos = pos[:, None] + jnp.arange(K1, dtype=jnp.int32)[None, :]  # [B,K1]
+
+    h = common.norm(x, p["ln"], cfg.norm)
+    h = boundary.wire_roundtrip(h, p["sp_in"], ctx.codec)
+    wq = fsdp_gather(p["wq"], ctx, 0)
+    q = h @ wq                                      # [B,K1,Hq_loc*dh]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, K1, d["Hq_loc"], dh)
+
+    wk = fsdp_gather(p["wk"], ctx, 0)
+    wv = fsdp_gather(p["wv"], ctx, 0)
+    k_new = h @ wk
+    v_new = h @ wv
+    if cfg.qkv_bias:
+        k_new = k_new + p["bk"]
+        v_new = v_new + p["bv"]
+    k_new = k_new.reshape(B, K1, d["Hkv_loc"], dh)
+    v_new = v_new.reshape(B, K1, d["Hkv_loc"], dh)
+    if cfg.rope_kind != "none":
+        aux_d = dict(aux)
+        aux_d["positions"] = qpos
+        if cfg.rope_kind == "mrope":
+            aux_d["positions3"] = jnp.broadcast_to(qpos[None], (3, B, K1))
+        q = _rope(cfg, q, aux_d)
+        k_new = _rope(cfg, k_new, aux_d)
+    if ctx.tp_size > 1:
+        q = lax.all_gather(q, ctx.tp, axis=2, tiled=True)
+    if not d["kv_rep"] and ctx.tp_size > 1:
+        k_new = lax.all_gather(k_new, ctx.tp, axis=2, tiled=True)
+        v_new = lax.all_gather(v_new, ctx.tp, axis=2, tiled=True)
+
+    # scatter the K1 new KV rows one position at a time (K1 is static and
+    # small): sequential writes keep the update duplicate-free when
+    # out-of-range clips collide with in-range positions
+    Ss = cache["k"].shape[1]
+    off = cp_linear_index(ctx) * Ss
+    bidx = jnp.arange(B)
+    ck, cv = cache["k"], cache["v"]
+    for j in range(K1):
+        pj = qpos[:, j]
+        in_range = (pj >= off) & (pj < off + Ss)
+        loc = jnp.clip(pj - off, 0, Ss - 1)
+        sel = in_range[:, None, None]
+        k_w = jnp.where(sel, k_new[:, j].astype(ck.dtype), ck[bidx, loc])
+        v_w = jnp.where(sel, v_new[:, j].astype(cv.dtype), cv[bidx, loc])
+        ck = ck.at[bidx, loc].set(k_w)
+        cv = cv.at[bidx, loc].set(v_w)
+    cache = {"k": ck, "v": cv}
+
+    window = cfg.window if kind == "local" else 0
+    o, lse = common.verify_attention_partial(
+        q, cache["k"], cache["v"], pos=qpos, shard_offset=off,
+        window=window, cap=cfg.attn_softcap)
+    o = common.combine_decode_partials(o, lse, ctx.cp)
+
+    r = lax.axis_index(ctx.tp)
+    o_loc = lax.dynamic_slice_in_dim(o, r * d["Hq_loc"], d["Hq_loc"], axis=2)
+    wo = fsdp_gather(p["wo"], ctx, 1)
+    part = o_loc.reshape(B, K1, d["Hq_loc"] * dh).astype(x.dtype) @ wo
+    y = boundary.coded_psum(part, p["sp_out"], ctx.codec, ctx.tp)
+    if cfg.post_norm:
+        y = common.norm(y, p["post_ln"], cfg.norm)
+    return x + y, cache

@@ -185,8 +185,41 @@ def decode_attention_partial(q, k_shard, v_shard, *, pos, shard_offset,
     shard_offset: absolute position of this shard's first cache slot.
     Returns (out [B, Hq, dh] — unnormalized partial, lse [B, Hq]) for
     cross-shard LSE combination.
+
+    Implemented as the K1=1 case of ``verify_attention_partial`` so the
+    speculative-verify path's greedy bit-identity with vanilla decode is
+    structural (one copy of the masking/softmax math), not a convention
+    maintained across two functions.
     """
     B, Hq, dh = q.shape
+    posb = jnp.asarray(pos)
+    if posb.ndim == 0:
+        posb = jnp.broadcast_to(posb, (B,))
+    o, lse = verify_attention_partial(
+        q[:, None], k_shard, v_shard, pos=posb[:, None],
+        shard_offset=shard_offset, window=window, cap=cap)
+    return o[:, 0], lse[:, 0]
+
+
+def verify_attention_partial(q, k_shard, v_shard, *, pos, shard_offset,
+                             window=0, cap=0.0):
+    """K1-token speculative-verify step over a *sequence shard* of the KV
+    cache.
+
+    The multi-query sibling of ``decode_attention_partial``: q carries
+    K1 = spec_k+1 query tokens per slot (the last committed token plus
+    the draft), each attending to cache positions <= its own absolute
+    position, so one batched step scores every draft position at once.
+    The per-query math (masking, online-softmax reduction order over the
+    cache axis) mirrors the single-token path exactly — greedy verify
+    must be bit-identical to running K1 vanilla decode steps.
+
+    q [B, K1, Hq, dh]; k_shard/v_shard [B, Ss, Hkv, dh]; pos [B, K1]
+    absolute per-query positions; shard_offset: absolute position of this
+    shard's first cache slot.  Returns (out [B, K1, Hq, dh] — locally
+    normalized partial, lse [B, K1, Hq]) for cross-shard LSE combination.
+    """
+    B, K1, Hq, dh = q.shape
     _, Ss, Hkv, _ = k_shard.shape
     g = Hq // Hkv
     scale = 1.0 / math.sqrt(dh)
@@ -195,21 +228,18 @@ def decode_attention_partial(q, k_shard, v_shard, *, pos, shard_offset,
     if Hkv != Hq:
         kb = jnp.repeat(kb, g, axis=2)
         vb = jnp.repeat(vb, g, axis=2)
-    s = jnp.einsum("bhd,bkhd->bhk", q.astype(F32), kb) * scale
+    s = jnp.einsum("bqhd,bkhd->bqhk", q.astype(F32), kb) * scale
     s = softcap(s, cap)
     k_pos = shard_offset + jnp.arange(Ss)
-    posb = jnp.asarray(pos)
-    if posb.ndim == 0:
-        posb = jnp.broadcast_to(posb, (B,))
-    posb = posb[:, None, None]                       # [B,1,1]
-    mask = k_pos[None, None, :] <= posb
+    posb = jnp.asarray(pos)[:, :, None, None]        # [B,K1,1,1]
+    mask = k_pos[None, None, None, :] <= posb
     if window:
-        mask &= (posb - k_pos[None, None, :]) < window
+        mask &= (posb - k_pos[None, None, None, :]) < window
     s = jnp.where(mask, s, -1e30)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])
     l = jnp.sum(p, axis=-1)
-    o = jnp.einsum("bhk,bkhd->bhd", p, vb)
+    o = jnp.einsum("bqhk,bkhd->bqhd", p, vb)
     o = o / jnp.maximum(l[..., None], 1e-30)        # locally normalized
     lse = m + jnp.log(jnp.maximum(l, 1e-30))
     return o, lse

@@ -569,6 +569,91 @@ def forward_decode(params, cache, token, pos, ctx: Context, aux_extra=None):
     return logits, new_cache
 
 
+def _unit_verify(unit_p, x, cache_u, pos, ctx: Context, aux):
+    """One scanned unit of the batched k-token verify step.
+
+    Attention families only: recurrent blocks (ssm/rnn/rwkv) fold every
+    token into their state, which cannot roll back when a draft is
+    rejected — the serving engine forces ``spec_k=0`` for those.
+    """
+    cfg = ctx.cfg
+    new_cache = {}
+    for i, kind in enumerate(cfg.pattern):
+        p = unit_p[f"pos{i}"]
+        c_i = cache_u[f"pos{i}"]
+        nc_i = {}
+        if kind in ("attn", "global", "local", "attn_moe"):
+            x, kv = blocks_attn.attn_verify_fwd(p, x, c_i["kv"], pos, ctx,
+                                                aux, kind=kind)
+            nc_i["kv"] = kv
+            if kind == "attn_moe":
+                x, _, _ = blocks_moe.moe_fwd(p, x, ctx, aux)
+            else:
+                x, _, _ = blocks_attn.mlp_fwd(p, x, ctx, aux)
+        else:
+            raise NotImplementedError(
+                f"verify step over recurrent block {kind!r}: state cannot "
+                "roll back rejected drafts (engine falls back to spec_k=0)")
+        new_cache[f"pos{i}"] = nc_i
+    return x, new_cache
+
+
+def forward_verify(params, cache, tokens, pos, ctx: Context, aux_extra=None):
+    """Batched speculative-verify step: score K1 = spec_k+1 positions of
+    every slot in ONE forward (the decode-boundary traffic of K1 steps
+    through one set of coded collectives — the workload the spike wire
+    absorbs).
+
+    tokens [B, K1] int32 — per slot, the last committed token followed by
+    spec_k draft tokens; pos [B] int32 — the base cache position of each
+    slot's first token.  KV for position pos+j is written for every j;
+    acceptance (and occupancy rollback of rejected positions) is the
+    scheduler's job.  Returns (logits_local [B, K1, V_loc], new_cache);
+    logits[:, j] condition on tokens[:, :j+1] — greedy-argmax of column j
+    is the verify target for draft j+1.
+    """
+    cfg = ctx.cfg
+    ctx = ctx.with_(mode="decode")
+    aux = dict(aux_extra or {})
+    B, K1 = tokens.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    # same vocab-sharded embed boundary as forward_decode, K1 tokens wide
+    emb = fsdp_gather(params["embed"], ctx, 1)
+    tp = ctx.tp_size
+    if tp == 1:
+        x = jnp.take(emb, tokens, axis=0)                    # [B,K1,D]
+    else:
+        V_loc = cfg.vocab_padded(tp) // tp
+        r = lax.axis_index(ctx.tp)
+        off = r * V_loc
+        loc = jnp.clip(tokens - off, 0, V_loc - 1)
+        part = jnp.take(emb, loc, axis=0)
+        valid = ((tokens >= off) & (tokens < off + V_loc))[..., None]
+        part = jnp.where(valid, part, 0).astype(cfg.dtype)
+        x = boundary.coded_psum(part, params["sp_embed"], ctx.codec, ctx.tp)
+    x = x.astype(cfg.dtype)
+
+    if params.get("cross_units") is not None:
+        raise NotImplementedError("verify step: encoder-decoder unsupported")
+
+    def body(carry, slc):
+        x = carry
+        unit_p, cache_u = slc
+        x, nc = _unit_verify(unit_p, x, cache_u, pos, ctx, aux)
+        return x, nc
+
+    x, new_cache = lax.scan(body, x, (params["units"], cache))
+
+    h = common.norm(x, params["final_ln"], cfg.norm)
+    if ctx.tp_size > 1:
+        h = boundary.wire_roundtrip(h, params["sp_head"], ctx.codec)
+    head = _head_w(params, ctx)
+    logits = (h @ head).astype(F32)                          # [B,K1,V_loc]
+    if cfg.final_softcap:
+        logits = common.softcap(logits, cfg.final_softcap)
+    return logits, new_cache
+
+
 def _make_aux(batch, ctx: Context):
     cfg = ctx.cfg
     tokens = batch["tokens"]

@@ -1,9 +1,14 @@
-"""Batched serving: continuous batching, paged KV, on-device sampling."""
-from .engine import (EngineConfig, Request, ServingEngine,
-                     make_engine_decode_step, make_engine_prefill_step)
+"""Batched serving: continuous batching, paged KV, on-device sampling,
+and self-drafting speculative decoding over the spike-coded wire."""
+from .draft import NGramDrafter
+from .engine import (WARMUP_RID, EngineConfig, EngineConfigError, Request,
+                     SchedulerStall, ServingEngine, make_engine_decode_step,
+                     make_engine_prefill_step, make_engine_verify_step)
 from .kv_cache import PagedKVCache, SlotAllocator
-from .sampling import SamplingConfig, sample
+from .sampling import SamplingConfig, sample, sample_verify
 
-__all__ = ["EngineConfig", "Request", "ServingEngine", "PagedKVCache",
-           "SlotAllocator", "SamplingConfig", "sample",
-           "make_engine_decode_step", "make_engine_prefill_step"]
+__all__ = ["EngineConfig", "EngineConfigError", "NGramDrafter", "Request",
+           "SchedulerStall", "ServingEngine", "PagedKVCache",
+           "SlotAllocator", "SamplingConfig", "WARMUP_RID", "sample",
+           "sample_verify", "make_engine_decode_step",
+           "make_engine_prefill_step", "make_engine_verify_step"]

@@ -1,7 +1,7 @@
 """Continuous-batching serving engine over the spike-coded decode path.
 
 One ``ServingEngine`` owns a fixed pool of request slots (the decode
-batch), a slot-major ``PagedKVCache``, and three compiled programs:
+batch), a slot-major ``PagedKVCache``, and up to four compiled programs:
 
   prefill : B=1, fixed-length right-padded prompt -> slot-shaped cache
             + the first sampled token (logits taken at the true last
@@ -10,6 +10,20 @@ batch), a slot-major ``PagedKVCache``, and three compiled programs:
   decode  : ONE step for ALL slots at once — per-slot positions,
             per-slot temperatures, fused distributed sampling — with the
             cache donated so serving is allocation-free at steady state
+  verify  : (``spec_k > 0``) the speculative sibling of decode — scores
+            K1 = spec_k+1 positions per slot in one batched forward
+            (last committed token + spec_k draft tokens from the
+            deterministic prompt-lookup drafter), writes KV for all of
+            them, and returns K1 sampled tokens per slot.  The scheduler
+            keeps the longest draft prefix matching the verify output
+            plus the first correction token, then rolls the rejected
+            tail's cache occupancy back (``PagedKVCache.rollback``).
+            Greedy spec decoding is token-identical to ``spec_k=0``
+            (asserted by tests/dist_scenarios.py ``serving_spec_parity``);
+            the k-fold decode-boundary traffic of the verify step rides
+            the same coded collectives, which is exactly the workload
+            the spike wire makes cheap.  Families with recurrent state
+            fall back to ``spec_k=0`` — their state cannot roll back.
 
 Scheduling is classic continuous batching: every ``step()`` first admits
 queued requests into free slots (prefill-then-decode interleaving), then
@@ -53,12 +67,32 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import ShapeCell
 from ..launch.serve import strip_dp_specs
 from ..launch.specs import (cache_specs, make_context, make_plan,
-                            serve_decode_input_specs)
+                            serve_decode_input_specs,
+                            serve_verify_input_specs, verify_shape_cell)
 from ..launch.train import shard_params_specs
 from ..models import model as M
 from . import sampling
+from .draft import NGramDrafter
 from .kv_cache import PagedKVCache
 from .sampling import SamplingConfig
+
+
+class EngineConfigError(ValueError):
+    """Unserveable engine configuration (bad mesh/shape/family combo).
+
+    Raised from ``ServingEngine.__init__`` instead of ``assert`` so the
+    checks survive ``python -O``.
+    """
+
+
+class SchedulerStall(RuntimeError):
+    """``run`` exhausted ``max_steps`` with requests still in flight."""
+
+
+#: Reserved request id for ``warmup``'s throwaway request.  A fresh
+#: ``object()`` compares equal only to itself, so no user-supplied rid
+#: (int, str, uuid, ...) can ever collide with it in a results dict.
+WARMUP_RID = object()
 
 
 @dataclasses.dataclass
@@ -82,12 +116,14 @@ class EngineConfig:
     eos_id: Optional[int] = None
     replicate_weights: bool = False
     seed: int = 0
+    spec_k: int = 0                # draft tokens per verify step (0: off)
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Request
     out: list
+    drafter: Optional[NGramDrafter] = None
 
 
 def make_engine_prefill_step(cfg, plan, mesh, scfg: SamplingConfig,
@@ -140,6 +176,36 @@ def make_engine_decode_step(cfg, plan, mesh, scfg: SamplingConfig,
     return jax.jit(fn, donate_argnums=(1,))
 
 
+def make_engine_verify_step(cfg, plan, mesh, scfg: SamplingConfig, spec_k,
+                            replicate_weights=False):
+    """verify(params, cache, tokens[B,K1], pos[B], temp[B], key) ->
+    (tokens_out [B,K1], cache) — cache donated.
+
+    One batched forward over all K1 = spec_k+1 speculative positions of
+    every slot; column j of ``tokens_out`` is the model's (greedy or
+    sampled) next token after committing ``tokens[:, :j+1]``.
+    """
+    _, pspecs, _ = shard_params_specs(cfg, plan)
+    ctx = make_context(plan, "decode")
+    if replicate_weights:
+        pspecs = strip_dp_specs(pspecs)
+        ctx = ctx.with_(dp_size=1)
+    _, ispecs = serve_verify_input_specs(plan, spec_k)
+
+    def step(params, cache, tokens, pos, temp, key):
+        logits, cache = M.forward_verify(params, cache, tokens, pos, ctx)
+        tok = sampling.sample_verify(logits, key, temp, tp=ctx.tp,
+                                     tp_size=ctx.tp_size, cfg=scfg)
+        return tok, cache
+
+    fn = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(pspecs, ispecs["cache"], ispecs["token"], ispecs["pos"],
+                  ispecs["temp"], ispecs["key"]),
+        out_specs=(ispecs["token"], ispecs["cache"]), check_vma=False)
+    return jax.jit(fn, donate_argnums=(1,))
+
+
 _RECURRENT_CACHE_KEYS = ("ssm_state", "rnn_state", "rwkv_state")
 
 
@@ -147,29 +213,50 @@ class ServingEngine:
     """Batched continuous-batching decode over a slot pool."""
 
     def __init__(self, cfg, mesh, params, ecfg: EngineConfig):
-        assert not cfg.is_encdec, "encoder-decoder serving: follow-on"
+        if cfg.is_encdec:
+            raise EngineConfigError("encoder-decoder serving: follow-on")
         self.cfg, self.mesh, self.params, self.ecfg = cfg, mesh, params, ecfg
         prefill_len = ecfg.prefill_len or ecfg.max_seq
         cell_dec = ShapeCell("serve_decode", ecfg.max_seq, ecfg.num_slots,
                              "decode")
         self.plan = make_plan(cfg, cell_dec, mesh)
-        assert self.plan.batch_sharded, (
-            f"num_slots={ecfg.num_slots} must divide over the data axes "
-            f"(dp_size={self.plan.dp_size})")
-        assert ecfg.max_seq % self.plan.tp_size == 0
-        assert prefill_len % self.plan.tp_size == 0
+        if not self.plan.batch_sharded:
+            raise EngineConfigError(
+                f"num_slots={ecfg.num_slots} must divide over the data axes "
+                f"(dp_size={self.plan.dp_size})")
+        if ecfg.max_seq % self.plan.tp_size != 0:
+            raise EngineConfigError(
+                f"max_seq={ecfg.max_seq} must be divisible by "
+                f"tp_size={self.plan.tp_size}")
+        if prefill_len % self.plan.tp_size != 0:
+            raise EngineConfigError(
+                f"prefill_len={prefill_len} must be divisible by "
+                f"tp_size={self.plan.tp_size}")
+        if ecfg.spec_k < 0:
+            raise EngineConfigError(f"spec_k={ecfg.spec_k} must be >= 0")
         cell_pre = ShapeCell("serve_admit", prefill_len, 1, "prefill")
         self.plan_pre = make_plan(cfg, cell_pre, mesh)
         self.prefill_len = prefill_len
         self._has_state = any(
             k in _RECURRENT_CACHE_KEYS
             for pos in cache_specs(self.plan)[0].values() for k in pos)
+        # recurrent state folds every token in and cannot roll back a
+        # rejected draft: those families serve vanilla (spec_k=0)
+        self.spec_k = 0 if self._has_state else ecfg.spec_k
 
         scfg = SamplingConfig(top_k=ecfg.top_k, top_p=ecfg.top_p)
         self._prefill = make_engine_prefill_step(
             cfg, self.plan_pre, mesh, scfg, ecfg.replicate_weights)
         self._decode = make_engine_decode_step(
             cfg, self.plan, mesh, scfg, ecfg.replicate_weights)
+        self._verify = None
+        if self.spec_k > 0:
+            self.plan_ver = make_plan(
+                cfg, verify_shape_cell(ecfg.max_seq, ecfg.num_slots,
+                                       self.spec_k), mesh)
+            self._verify = make_engine_verify_step(
+                cfg, self.plan_ver, mesh, scfg, self.spec_k,
+                ecfg.replicate_weights)
         self.cache = PagedKVCache(self.plan, self.plan_pre, mesh,
                                   ecfg.page_size)
 
@@ -183,6 +270,8 @@ class ServingEngine:
         self._tick = 0
         self.tokens_generated = 0
         self.decode_steps = 0
+        self.spec_commits = 0      # tokens committed by verify steps
+        self.spec_verifies = 0     # (slot, verify-step) participations
 
     # -- request lifecycle -------------------------------------------------
 
@@ -216,7 +305,10 @@ class ServingEngine:
         # generated tokens as each decode step lands them (extend below)
         slot = self.cache.admit(pre_cache, P_len)
         first = int(np.asarray(first)[0])
-        self._slots[slot] = _Slot(req, [first])
+        drafter = None
+        if self.spec_k > 0:
+            drafter = NGramDrafter(list(req.prompt) + [first])
+        self._slots[slot] = _Slot(req, [first], drafter)
         self._tokens[slot] = first
         self._pos[slot] = P_len
         self._temp[slot] = req.temperature
@@ -244,13 +336,17 @@ class ServingEngine:
         return not self._queue and self.num_active == 0
 
     def step(self) -> list:
-        """Admit what fits, then one batched decode step.  Returns the
-        requests finished this step as (request, tokens) pairs."""
+        """Admit what fits, then one batched decode (or k-token verify)
+        step.  Returns the requests finished this step as
+        (request, tokens) pairs."""
         finished: list = []
         while self._queue and self.cache.allocator.num_free:
             self._admit(self._queue.popleft(), finished)
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
+            return finished
+        if self.spec_k > 0:
+            self._spec_step(active, finished)
             return finished
         nxt, self.cache.buffers = self._decode(
             self.params, self.cache.buffers, self._tokens, self._pos,
@@ -267,6 +363,60 @@ class ServingEngine:
             self._maybe_retire(i, tok, finished)
         return finished
 
+    def _spec_step(self, active, finished):
+        """One speculative step: draft k per slot, verify all k+1
+        positions in one batched forward, commit the longest accepted
+        prefix plus the model's correction token, roll back the rest.
+
+        Under greedy sampling the committed stream is token-identical to
+        ``spec_k=0``: drafts only ever get accepted when they equal the
+        argmax the vanilla step would have produced, and the first
+        correction token is that argmax itself.
+        """
+        k = self.spec_k
+        n = self.ecfg.num_slots
+        drafts = np.zeros((n, k), np.int32)
+        for i in active:
+            drafts[i] = self._slots[i].drafter.propose(k)
+        tok_in = np.concatenate([self._tokens[:, None], drafts], axis=1)
+        out, self.cache.buffers = self._verify(
+            self.params, self.cache.buffers, tok_in, self._pos,
+            self._temp, self._next_key())
+        out = np.asarray(out)                                  # [n, k+1]
+        self.decode_steps += 1
+        for i in active:
+            st = self._slots[i]
+            # the verify step wrote KV at pos..pos+k; account them all,
+            # then roll the rejected tail back once acceptance is known
+            self.cache.allocator.extend(i, k + 1)
+            a = 0
+            while a < k and drafts[i, a] == out[i, a]:
+                a += 1
+            committed = 0
+            for j in range(a + 1):                 # accepted drafts + fixup
+                tok = int(out[i, j])
+                st.out.append(tok)
+                st.drafter.extend([tok])
+                self._tokens[i] = tok
+                self._pos[i] += 1
+                self.tokens_generated += 1
+                committed += 1
+                if (len(st.out) >= st.req.max_new_tokens
+                        or (self.ecfg.eos_id is not None
+                            and tok == self.ecfg.eos_id)
+                        or self._pos[i] >= self.ecfg.max_seq):
+                    break
+            self.cache.rollback(i, int(self._pos[i]))
+            self.spec_commits += committed
+            self.spec_verifies += 1
+            self._maybe_retire(i, int(self._tokens[i]), finished)
+
+    @property
+    def mean_accepted_len(self) -> float:
+        """Mean tokens committed per (slot, verify-step) — >1.0 means the
+        drafter is paying for itself."""
+        return self.spec_commits / max(self.spec_verifies, 1)
+
     def run(self, requests: Sequence[Request], max_steps: int = 100000):
         """Serve ``requests`` to completion; {rid: generated tokens}."""
         for r in requests:
@@ -277,20 +427,41 @@ class ServingEngine:
                 results[req.rid] = out
             if self.idle:
                 break
-        assert self.idle, "ran out of steps"
+        if not self.idle:
+            raise SchedulerStall(
+                f"run: {self.num_active} slots still active and "
+                f"{len(self._queue)} requests queued after "
+                f"{max_steps} steps")
         return results
 
     def warmup(self, prompt: Sequence[int]):
-        """Compile the prefill/insert/decode programs off the clock by
-        serving one throwaway request, then zero the throughput stats."""
-        self.run([Request(rid=-1, prompt=prompt, max_new_tokens=2)])
+        """Compile the prefill/insert/decode/verify programs off the
+        clock by serving one throwaway request, then zero the throughput
+        stats.  The throwaway uses the reserved ``WARMUP_RID`` sentinel,
+        which no user-supplied rid can equal."""
+        self.run([Request(rid=WARMUP_RID, prompt=prompt, max_new_tokens=2)])
         self.reset_stats()
 
     def reset_stats(self):
         self.tokens_generated = 0
         self.decode_steps = 0
+        self.spec_commits = 0
+        self.spec_verifies = 0
 
     # -- introspection -----------------------------------------------------
+
+    def _wire_stats(self, program, ins, tokens_per_step: float):
+        """lower+compile ``program`` on its input specs and parse the ICI
+        collectives; (CollectiveStats, total wire bytes per token across
+        the mesh at ``tokens_per_step`` tokens committed per step)."""
+        from ..launch import roofline as RL
+        lowered = program.lower(
+            self.params, self.cache.buffers, ins["token"], ins["pos"],
+            ins["temp"], ins["key"])
+        stats = RL.parse_collectives(lowered.compile().as_text())
+        ndev = self.plan.dp_size * self.plan.tp_size
+        per_tok = stats.wire_bytes * ndev / max(tokens_per_step, 1e-9)
+        return stats, per_tok
 
     def decode_wire_stats(self):
         """Parse the compiled batched decode step's collectives.
@@ -299,12 +470,22 @@ class ServingEngine:
         bytes of ONE decode step, scaled to total bytes per generated
         token across the mesh.
         """
-        from ..launch import roofline as RL
         ins, _ = serve_decode_input_specs(self.plan)
-        lowered = self._decode.lower(
-            self.params, self.cache.buffers, ins["token"], ins["pos"],
-            ins["temp"], ins["key"])
-        stats = RL.parse_collectives(lowered.compile().as_text())
-        ndev = self.plan.dp_size * self.plan.tp_size
-        per_tok = stats.wire_bytes * ndev / self.ecfg.num_slots
-        return stats, per_tok
+        return self._wire_stats(self._decode, ins, self.ecfg.num_slots)
+
+    def verify_wire_stats(self, accepted_len: float = 1.0):
+        """Parse the compiled k-token verify step's collectives.
+
+        Returns (CollectiveStats, wire_bytes_per_token): per-device ICI
+        bytes of ONE verify step, scaled to total bytes per *committed*
+        token across the mesh at the given mean accepted length.  The
+        verify step moves ~(spec_k+1)x the decode step's D-space
+        activation bytes through the same coded boundaries — the traffic
+        multiplier the spike wire absorbs; dividing by ``accepted_len``
+        shows what the wire actually pays per token kept.
+        """
+        if self._verify is None:
+            raise EngineConfigError("verify_wire_stats: spec_k == 0")
+        ins, _ = serve_verify_input_specs(self.plan_ver, self.spec_k)
+        return self._wire_stats(self._verify, ins,
+                                self.ecfg.num_slots * accepted_len)

@@ -63,8 +63,26 @@ class SlotAllocator:
     def extend(self, slot: int, n: int = 1):
         self._len[slot] = min(self._len[slot] + n, self.max_seq)
 
+    def rollback(self, slot: int, new_len: int):
+        """Roll a slot's occupancy back to ``new_len`` positions.
+
+        Speculative decoding writes KV for every draft position before
+        acceptance is known; the scheduler calls this to return the
+        rejected tail's pages.  Only shrinking (or no-op) is legal —
+        growth goes through ``extend``.
+        """
+        if not 0 < new_len <= self._len[slot]:
+            raise ValueError(
+                f"rollback slot {slot} to {new_len}: occupancy is "
+                f"{int(self._len[slot])} (must shrink to a positive length)")
+        self._len[slot] = new_len
+
     def free(self, slot: int):
-        assert self._len[slot] > 0, f"slot {slot} already free"
+        if self._len[slot] <= 0:
+            # typed (not assert): a double free surviving `python -O`
+            # would put the slot on the free list twice and hand it to
+            # two requests at once
+            raise ValueError(f"slot {slot} already free")
         self._len[slot] = 0
         self._free.append(slot)
 
@@ -176,6 +194,19 @@ class PagedKVCache:
 
     def evict(self, slot: int):
         self.allocator.free(slot)
+
+    def rollback(self, slot: int, new_len: int):
+        """Position-range rollback after rejected speculative drafts.
+
+        Returns the occupancy (page accounting) of cache positions
+        ``new_len..`` to the allocator.  The device-side KV rows for the
+        rejected range are left in place deliberately: they sit strictly
+        beyond the slot's committed position, so the per-position causal
+        mask keeps every future query from attending to them, and the
+        next verify window (which starts exactly at ``new_len``)
+        overwrites them before they could ever become visible.
+        """
+        self.allocator.rollback(slot, new_len)
 
     def bytes_per_slot(self) -> int:
         per = 0

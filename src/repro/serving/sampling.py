@@ -118,3 +118,24 @@ def sample(logits_local, key, temps, *, tp, tp_size,
     stoch = dist_argmax(lt + gz, tp, tp_size)
 
     return jnp.where(temps > 0, stoch, greedy).astype(jnp.int32)
+
+
+def sample_verify(logits_local, key, temps, *, tp, tp_size,
+                  cfg: SamplingConfig | None = None):
+    """Vectorized accept-sampling over K1 verify positions.
+
+    logits_local [B, K1, V_loc] (one row per speculative position) ->
+    tokens [B, K1].  Flattens the position axis into the slot axis so
+    every position goes through exactly the same fused kernel as a
+    vanilla decode step: under greedy (temps == 0) column j is the
+    bit-exact argmax a vanilla step would produce after committing
+    tokens[:, :j+1], which is what makes greedy speculative decoding
+    token-identical to spec_k=0.  Stochastic positions draw independent
+    per-(slot, position) Gumbel noise, so each accepted token is still an
+    exact draw from its committed-prefix conditional.
+    """
+    B, K1, V_loc = logits_local.shape
+    flat = logits_local.reshape(B * K1, V_loc)
+    temps_f = jnp.repeat(temps, K1)
+    tok = sample(flat, key, temps_f, tp=tp, tp_size=tp_size, cfg=cfg)
+    return tok.reshape(B, K1)

@@ -1,0 +1,27 @@
+"""Host-side reference sampler distribution shared by the tp=1
+(tests/test_serving.py) and tp=8 (tests/dist_scenarios.py) statistical
+tests — one copy of the top-k threshold / sorted-cumsum minimal-nucleus
+convention, so both TV-distance checks validate against the same
+reference if the fused sampler's semantics ever change."""
+import numpy as np
+
+
+def host_reference_probs(row, temp, top_k=0, top_p=0.0):
+    """Exact next-token distribution of the reference sampler: filter
+    logits on the host (top-k threshold, then smallest top-probability
+    nucleus with mass >= top_p), softmax at ``temp``."""
+    lt = np.asarray(row, np.float64) / temp
+    if top_k:
+        thr = np.sort(lt)[-top_k]
+        lt = np.where(lt < thr, -np.inf, lt)
+    if 0.0 < top_p < 1.0:
+        p = np.exp(lt - lt[np.isfinite(lt)].max())
+        p = p / p.sum()
+        order = np.argsort(-p)
+        keep = np.cumsum(p[order]) - p[order] < top_p   # minimal nucleus
+        mask = np.zeros(lt.shape, bool)
+        mask[order[keep]] = True
+        lt = np.where(mask, lt, -np.inf)
+    e = np.exp(lt - lt[np.isfinite(lt)].max())
+    e[~np.isfinite(e)] = 0.0
+    return e / e.sum()

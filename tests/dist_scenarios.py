@@ -368,6 +368,117 @@ def scenario_serving_sampling():
     print("serving sampling OK")
 
 
+def scenario_serving_spec_parity():
+    """Speculative decoding invariant: with greedy sampling, spec_k>0 is
+    token-identical to the vanilla engine for attention-family configs
+    (``none`` and ``spike_fused`` codecs), the drafter accepts >1 token
+    per verify step on a repetitive workload, and no pages leak through
+    the accept/rollback path."""
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.configs.reduced import reduced
+    from repro.launch import specs as SP, train as TR
+    from repro.serving import EngineConfig, Request, ServingEngine
+    mesh = mesh24()
+    P_len, N = 16, 24
+    rng = np.random.RandomState(0)
+    # repetitive prompts (greedy decode on random weights also falls into
+    # cycles, which prompt-lookup then drafts correctly)
+    base = [list(rng.randint(0, 256, 4)) for _ in range(3)]
+    prompts = [base[i % 3] * 4 for i in range(6)]
+    for codec in ("none", "spike_fused"):
+        hnn = "ann" if codec == "none" else "hnn"
+        cfg = reduced(get_config("qwen1.5-0.5b", hnn_mode=hnn)).replace(
+            dtype=jnp.float32, codec=codec)
+        cell = ShapeCell("serve_decode", 48, 4, "decode")
+        plan = SP.make_plan(cfg, cell, mesh)
+        params = TR.init_sharded_params(cfg, plan, mesh,
+                                        jax.random.PRNGKey(0))
+        reqs = lambda: [Request(rid=i, prompt=p, max_new_tokens=N)
+                        for i, p in enumerate(prompts)]
+        vanilla = ServingEngine(cfg, mesh, params, EngineConfig(
+            num_slots=4, max_seq=48, prefill_len=16, page_size=8))
+        res_v = vanilla.run(reqs())
+        spec = ServingEngine(cfg, mesh, params, EngineConfig(
+            num_slots=4, max_seq=48, prefill_len=16, page_size=8,
+            spec_k=3))
+        res_s = spec.run(reqs())
+        assert spec.spec_k == 3 and spec.spec_verifies > 0
+        for i in range(6):
+            assert res_s[i] == res_v[i], (codec, i, res_v[i], res_s[i])
+        alloc = spec.cache.allocator
+        assert alloc.pages_in_use == 0 and alloc.num_free == 4
+        mal = spec.mean_accepted_len
+        assert mal > 1.0, (codec, mal)
+        assert spec.decode_steps < vanilla.decode_steps, (
+            codec, spec.decode_steps, vanilla.decode_steps)
+        _, per_tok = spec.verify_wire_stats(mal)
+        assert per_tok > 0
+        print(f"spec parity OK {codec} accepted={mal:.2f} "
+              f"steps={spec.decode_steps}/{vanilla.decode_steps}")
+
+
+def scenario_serving_spec_recurrent_fallback():
+    """Recurrent-state families cannot roll back: the engine must force
+    spec_k=0 and still serve correctly."""
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.configs.reduced import reduced
+    from repro.launch import specs as SP, train as TR
+    from repro.serving import EngineConfig, Request, ServingEngine
+    mesh = mesh24()
+    cfg = reduced(get_config("xlstm-125m", hnn_mode="ann")).replace(
+        dtype=jnp.float32, codec="none")
+    cell = ShapeCell("serve_decode", 32, 4, "decode")
+    plan = SP.make_plan(cfg, cell, mesh)
+    params = TR.init_sharded_params(cfg, plan, mesh, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(num_slots=4, max_seq=32, prefill_len=16,
+                        page_size=8, spec_k=3)
+    eng = ServingEngine(cfg, mesh, params, ecfg)
+    assert eng.spec_k == 0 and eng._verify is None
+    rng = np.random.RandomState(0)
+    res = eng.run([Request(rid=i, prompt=list(rng.randint(0, 256, 16)),
+                           max_new_tokens=6) for i in range(4)])
+    assert len(res) == 4 and all(len(v) == 6 for v in res.values())
+    print("spec recurrent fallback OK")
+
+
+def scenario_sampling_stats():
+    """Statistical check of the fused distributed sampler at tp=8: the
+    empirical distribution of >=2k draws matches a host-side reference
+    softmax sampler (total-variation distance) for temperature-only,
+    top-k, and top-p configurations."""
+    from repro.launch.mesh import make_mesh
+    from repro.serving.sampling import SamplingConfig, sample
+    mesh = make_mesh((1, 8), ("data", "model"))
+    from _ref_sampling import host_reference_probs
+    V, DRAWS = 64, 4096
+    rng = np.random.RandomState(5)
+    row = rng.randn(V) * 2.0
+    # one independent draw per batch row: per-slot independence turns a
+    # [DRAWS, V] batch into DRAWS draws of the same distribution
+    logits = jnp.asarray(np.broadcast_to(row, (DRAWS, V)), jnp.float32)
+    temps = jnp.full(DRAWS, 0.7, jnp.float32)
+
+    def host_ref(scfg):
+        return host_reference_probs(row, 0.7, top_k=scfg.top_k,
+                                    top_p=scfg.top_p)
+
+    for name, scfg in [("temp", SamplingConfig()),
+                       ("topk8", SamplingConfig(top_k=8)),
+                       ("topp0.6", SamplingConfig(top_p=0.6))]:
+        f = jax.shard_map(
+            lambda l, k, t: sample(l, k, t, tp="model", tp_size=8, cfg=scfg),
+            mesh=mesh, in_specs=(P(None, "model"), P(), P()),
+            out_specs=P(None), check_vma=False)
+        tok = np.asarray(f(logits, jax.random.PRNGKey(11), temps))
+        emp = np.bincount(tok, minlength=V) / DRAWS
+        ref = host_ref(scfg)
+        tv = 0.5 * np.abs(emp - ref).sum()
+        assert tv < 0.06, (name, tv)
+        print(f"sampling stats OK {name} tv={tv:.4f}")
+
+
 SCENARIOS = {k[len("scenario_"):]: v for k, v in list(globals().items())
              if k.startswith("scenario_")}
 

@@ -1,0 +1,177 @@
+"""Randomized-schedule fuzz of the serving engine (single device).
+
+Property: for ANY schedule — mixed prompt lengths, per-request
+``max_new_tokens``, eos hits, queue pressure beyond the slot pool — every
+request's greedy output equals a solo run of the same request (batch
+composition can never leak between slots), for both the vanilla engine
+and the speculative one, and the page allocator ends every run with all
+pages free (no slot/page leaks through admit/retire/accept/rollback).
+
+Runs under hypothesis when installed (``pip install -e .[dev]``); without
+it the ``@given`` property pytest-skips (tests/_hyp.py) and the fixed
+deterministic schedules below still exercise the same invariants.
+
+Engines are built once per module (compile cost) and reused across
+schedules: a drained engine is a clean engine — that reuse is itself part
+of the property.
+"""
+import numpy as np
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+PREFILL_LEN = 16
+MAX_SEQ = 32
+NUM_SLOTS = 3
+VOCAB = 256
+EOS = 7
+
+_ENGINES = None
+
+
+def _engines():
+    """(cfg, batched vanilla, batched spec_k=2, solo) — built lazily once."""
+    global _ENGINES
+    if _ENGINES is None:
+        import jax
+        import jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.configs.base import ShapeCell
+        from repro.configs.reduced import reduced
+        from repro.launch import specs as SP, train as TR
+        from repro.launch.mesh import make_mesh
+        from repro.serving import EngineConfig, ServingEngine
+
+        mesh = make_mesh((1, 1), ("data", "model"))
+        cfg = reduced(get_config("qwen1.5-0.5b", hnn_mode="ann")).replace(
+            dtype=jnp.float32, codec="none")
+        cell = ShapeCell("serve_decode", MAX_SEQ, NUM_SLOTS, "decode")
+        plan = SP.make_plan(cfg, cell, mesh)
+        params = TR.init_sharded_params(cfg, plan, mesh,
+                                        jax.random.PRNGKey(0))
+        kw = dict(num_slots=NUM_SLOTS, max_seq=MAX_SEQ,
+                  prefill_len=PREFILL_LEN, page_size=8, eos_id=EOS)
+        batched = ServingEngine(cfg, mesh, params, EngineConfig(**kw))
+        spec = ServingEngine(cfg, mesh, params,
+                             EngineConfig(**kw, spec_k=2))
+        solo = ServingEngine(cfg, mesh, params, EngineConfig(**kw))
+        _ENGINES = (cfg, batched, spec, solo)
+    return _ENGINES
+
+
+def _assert_drained(engine):
+    alloc = engine.cache.allocator
+    assert engine.idle
+    assert alloc.num_free == NUM_SLOTS, "slot leak"
+    assert alloc.pages_in_use == 0, "page leak"
+    assert (alloc._len == 0).all(), "stale occupancy"
+
+
+def _check_schedule(schedule):
+    """schedule: list of (prompt_len, max_new_tokens) pairs."""
+    from repro.serving import Request
+    _, batched, spec, solo = _engines()
+    rng = np.random.RandomState(1234)
+    reqs = [Request(rid=i, prompt=list(rng.randint(0, VOCAB, plen)),
+                    max_new_tokens=mnt)
+            for i, (plen, mnt) in enumerate(schedule)]
+
+    def clone(r):
+        return Request(rid=r.rid, prompt=r.prompt,
+                       max_new_tokens=r.max_new_tokens)
+
+    res = batched.run([clone(r) for r in reqs])
+    res_spec = spec.run([clone(r) for r in reqs])
+    assert set(res) == {r.rid for r in reqs}
+    for r in reqs:
+        ref = solo.run([clone(r)])[r.rid]
+        assert res[r.rid] == ref, (r.rid, ref, res[r.rid])
+        assert res_spec[r.rid] == ref, ("spec", r.rid, ref, res_spec[r.rid])
+        # output contract: exactly max_new_tokens unless eos cut it short
+        if len(ref) < r.max_new_tokens:
+            assert ref[-1] == EOS
+        _assert_drained(solo)
+    _assert_drained(batched)
+    _assert_drained(spec)
+
+
+# ---------------------------------------------------------------------------
+# fixed deterministic schedules (always run, no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_schedule_queue_pressure():
+    """7 mixed-length requests through 3 slots: admits interleave with
+    retirements and the queue drains in arrival order."""
+    _check_schedule([(16, 6), (3, 1), (16, 8), (1, 4), (9, 8), (16, 2),
+                     (5, 5)])
+
+
+def test_fixed_schedule_single_and_short():
+    _check_schedule([(1, 1)])
+    _check_schedule([(16, 12), (16, 12), (16, 12)])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property (skips cleanly when hypothesis is not installed)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, PREFILL_LEN),
+                          st.integers(1, 8)),
+                min_size=1, max_size=2 * NUM_SLOTS + 1))
+def test_fuzz_schedules_match_solo_and_leak_free(schedule):
+    _check_schedule(schedule)
+
+
+# ---------------------------------------------------------------------------
+# typed-exception + warmup regressions (reuse the compiled engines)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_config_errors_are_typed_and_O_safe():
+    """__init__ validation must raise EngineConfigError (a ValueError),
+    not assert — asserts vanish under ``python -O``."""
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.configs.reduced import reduced
+    from repro.launch.mesh import make_mesh
+    from repro.serving import EngineConfig, EngineConfigError, ServingEngine
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(get_config("qwen1.5-0.5b", hnn_mode="ann")).replace(
+        dtype=jnp.float32, codec="none")
+    params = {}   # validation fires before params are ever touched
+    enc_cfg = reduced(get_config("seamless-m4t-medium", hnn_mode="ann"))
+    with pytest.raises(EngineConfigError):
+        ServingEngine(enc_cfg, mesh, params, EngineConfig())  # enc-dec
+    with pytest.raises(EngineConfigError):
+        ServingEngine(cfg, mesh, params,
+                      EngineConfig(num_slots=2, max_seq=32, spec_k=-1))
+    assert issubclass(EngineConfigError, ValueError)
+
+
+def test_run_stall_raises_scheduler_stall():
+    from repro.serving import Request, SchedulerStall
+    _, batched, _, _ = _engines()
+    with pytest.raises(SchedulerStall):
+        batched.run([Request(rid=0, prompt=[1, 2, 3], max_new_tokens=8)],
+                    max_steps=2)
+    # drain the stalled request so the engine is clean for other tests
+    while not batched.idle:
+        batched.step()
+    _assert_drained(batched)
+
+
+def test_warmup_rid_never_collides_with_user_rids():
+    """A user request whose rid equals warmup's old sentinel (-1) must
+    keep its results; WARMUP_RID is an unforgeable object."""
+    from repro.serving import Request, WARMUP_RID
+    _, batched, _, _ = _engines()
+    batched.warmup([1, 2, 3, 4])
+    assert batched.tokens_generated == 0          # stats reset
+    res = batched.run([Request(rid=-1, prompt=[5, 6, 7], max_new_tokens=3)])
+    assert set(res) == {-1} and len(res[-1]) <= 3
+    assert WARMUP_RID not in res
+    assert WARMUP_RID != -1 and WARMUP_RID != "warmup"
+    _assert_drained(batched)

@@ -4,6 +4,7 @@ dist_scenarios.py for why multi-device runs out-of-process)."""
 import numpy as np
 import pytest
 
+from _ref_sampling import host_reference_probs
 from test_distributed import run
 
 
@@ -46,8 +47,95 @@ def test_slot_allocator_rejects_double_free():
     a = SlotAllocator(2, 8, 4)
     s = a.alloc(4)
     a.free(s)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):      # typed: must survive python -O
         a.free(s)
+
+
+def test_slot_allocator_admit_when_full_raises():
+    from repro.serving import SlotAllocator
+    a = SlotAllocator(num_slots=2, max_seq=16, page_size=4)
+    a.alloc(8)
+    a.alloc(8)
+    with pytest.raises(RuntimeError):
+        a.alloc(1)                       # pool exhausted -> caller queues
+
+
+def test_slot_allocator_evict_admit_no_stale_occupancy():
+    from repro.serving import SlotAllocator
+    a = SlotAllocator(num_slots=2, max_seq=16, page_size=4)
+    s0 = a.alloc(16)                     # 4 pages
+    assert a.pages_used(s0) == 4
+    a.free(s0)
+    assert a.pages_in_use == 0           # occupancy fully returned
+    s1 = a.alloc(2)
+    a.alloc(2)
+    assert s1 in (0, 1)
+    # the recycled slot starts from the NEW request's length, not the old
+    assert a.pages_used(s1) == 1 and a.pages_in_use == 2
+
+
+def test_slot_allocator_extend_matches_positions():
+    """``extend`` accounting tracks the engine's ``_pos`` invariant:
+    after admit at P tokens and n decode commits, occupancy == P + n
+    (clipped at max_seq)."""
+    from repro.serving import SlotAllocator
+    a = SlotAllocator(num_slots=1, max_seq=16, page_size=4)
+    s = a.alloc(5)
+    pos = 5
+    for _ in range(8):
+        a.extend(s)
+        pos += 1
+        assert int(a._len[s]) == pos
+    a.extend(s, 10)                      # would cross max_seq: clips
+    assert int(a._len[s]) == 16
+    assert a.pages_used(s) == 4
+
+
+def test_slot_allocator_rollback_restores_occupancy():
+    """Speculative accept/rollback: extend by the k+1 written positions,
+    roll back to the committed length — occupancy lands exactly there."""
+    from repro.serving import SlotAllocator
+    a = SlotAllocator(num_slots=2, max_seq=32, page_size=4)
+    s = a.alloc(10)
+    k = 3
+    a.extend(s, k + 1)                   # verify wrote pos 10..13
+    assert int(a._len[s]) == 14
+    a.rollback(s, 12)                    # committed 2 of 4
+    assert int(a._len[s]) == 12 and a.pages_used(s) == 3
+    # rejecting everything but the fixup token
+    a.extend(s, k + 1)
+    a.rollback(s, 13)
+    assert int(a._len[s]) == 13
+    # near max_seq the extend clips; rollback still restores exactly
+    a.extend(s, 100)
+    assert int(a._len[s]) == 32
+    a.rollback(s, 14)
+    assert int(a._len[s]) == 14
+    with pytest.raises(ValueError):
+        a.rollback(s, 15)                # growth must go through extend
+    with pytest.raises(ValueError):
+        a.rollback(s, 0)                 # zero-length slot is `free`'s job
+
+
+# ---------------------------------------------------------------------------
+# n-gram drafter (host-side, deterministic)
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_drafter_prompt_lookup_and_fallback():
+    from repro.serving import NGramDrafter
+    d = NGramDrafter([1, 2, 3, 9, 1, 2, 3])
+    # suffix [1,2,3] matched at position 0 -> proposes its continuation
+    assert d.propose(3) == [9, 1, 2]
+    d.extend([9])                        # history ...1,2,3,9
+    assert d.propose(2) == [1, 2]        # suffix [2,3,9] -> cont [1,2]
+    # no n-gram recurrence: falls back to repeating the last token
+    d2 = NGramDrafter([5, 6, 7, 8])
+    assert d2.propose(3) == [8, 8, 8]
+    # deterministic: same history, same proposal
+    assert d.propose(2) == d.propose(2)
+    with pytest.raises(ValueError):
+        NGramDrafter([1], max_n=0)
 
 
 # ---------------------------------------------------------------------------
@@ -93,7 +181,61 @@ def test_sampling_single_device_greedy_topk_topp():
 
 
 # ---------------------------------------------------------------------------
-# multi-device engine parity (subprocess)
+# sampling statistics (tp_size == 1 in-process; tp > 1 in subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scfg_kw", [dict(), dict(top_k=8),
+                                     dict(top_p=0.6)])
+def test_sampling_statistics_match_host_reference(scfg_kw):
+    """Total-variation distance between >=2k fused-sampler draws and the
+    host reference softmax sampler, single-device path (tp_size == 1).
+    Per-slot independence turns one [DRAWS, V] batch into DRAWS
+    independent draws of the same distribution."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serving.sampling import SamplingConfig, sample
+    V, DRAWS, TEMP = 64, 4096, 0.7
+    rng = np.random.RandomState(5)
+    row = rng.randn(V) * 2.0
+    logits = jnp.asarray(np.broadcast_to(row, (DRAWS, V)), jnp.float32)
+    tok = np.asarray(sample(logits, jax.random.PRNGKey(11),
+                            jnp.full(DRAWS, TEMP, jnp.float32),
+                            tp=None, tp_size=1,
+                            cfg=SamplingConfig(**scfg_kw)))
+    emp = np.bincount(tok, minlength=V) / DRAWS
+    ref = host_reference_probs(row, TEMP, **scfg_kw)
+    tv = 0.5 * np.abs(emp - ref).sum()
+    assert tv < 0.06, (scfg_kw, tv)
+
+
+def test_top_p_bisection_matches_sorted_cumsum_nucleus():
+    """``_apply_top_p``'s bisected probability threshold must keep
+    exactly the reference nucleus (smallest top-probability set with
+    mass >= p) on random logits."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serving.sampling import _apply_top_p
+    B, V = 16, 128
+    lt = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (B, V)),
+                    np.float64) * 3.0
+    for p in (0.1, 0.3, 0.6, 0.9, 0.99):
+        out = np.asarray(_apply_top_p(jnp.asarray(lt, jnp.float32), p,
+                                      None, 1))
+        kept = np.isfinite(out)
+        probs = np.exp(lt - lt.max(-1, keepdims=True))
+        probs = probs / probs.sum(-1, keepdims=True)
+        for b in range(B):
+            order = np.argsort(-probs[b])
+            csum = np.cumsum(probs[b][order])
+            n_ref = int((csum < p).sum()) + 1       # minimal nucleus size
+            ref = np.zeros(V, bool)
+            ref[order[:n_ref]] = True
+            np.testing.assert_array_equal(kept[b], ref, err_msg=f"p={p}")
+
+
+# ---------------------------------------------------------------------------
+# multi-device engine parity + statistics (subprocess)
 # ---------------------------------------------------------------------------
 
 
@@ -107,3 +249,23 @@ def test_engine_matches_single_request_and_teacher_forced():
 
 def test_distributed_sampling_matches_host():
     run("serving_sampling")
+
+
+def test_distributed_sampling_statistics():
+    """TV distance of the fused sampler vs the host reference at tp=8."""
+    out = run("sampling_stats")
+    assert out.count("sampling stats OK") == 3
+
+
+def test_speculative_decoding_parity_and_acceptance():
+    """Tentpole invariant: greedy spec decoding (spec_k=3) is
+    token-identical to the vanilla engine for `none` and `spike_fused`,
+    accepts >1 token per verify step on a repetitive workload, uses
+    fewer device steps, and leaks no pages through accept/rollback."""
+    out = run("serving_spec_parity")
+    assert out.count("spec parity OK") == 2
+
+
+def test_speculative_recurrent_fallback():
+    """Recurrent-state families force spec_k=0 and still serve."""
+    run("serving_spec_recurrent_fallback")
