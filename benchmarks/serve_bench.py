@@ -10,7 +10,10 @@ Wire bytes come from parsing the compiled batched decode step's
 collectives (repro.launch.roofline), scaled across the mesh — the
 headline serving-side artifact of the paper: the spike codec shrinks
 the per-token die-to-die traffic while the scheduler keeps every slot
-busy.
+busy.  Alongside the wire numbers the report shows the KV page pool:
+peak pages in use / pool size and the KV bytes actually mapped vs the
+old dense per-slot reservation (``--num-pages`` sizes the pool; 0 =
+dense-equivalent default).
 
 With ``--spec-k K`` the engine runs self-drafting speculative decoding
 and the report adds the verify-step wire bytes per committed token plus
@@ -40,6 +43,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--codecs", default=",".join(CODECS))
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV pool page size (positions per page)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV page pool size (0: dense-equivalent "
+                         "default, num_slots * pages_per_slot)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative draft tokens per verify step")
     ap.add_argument("--repetitive", action="store_true",
@@ -80,6 +88,8 @@ def main():
             codec=codec)
         ecfg = EngineConfig(num_slots=args.slots, max_seq=max_seq,
                             prefill_len=args.prompt_len,
+                            page_size=args.page_size,
+                            num_pages=args.num_pages,
                             spec_k=args.spec_k)
         cell = ShapeCell("serve_decode", max_seq, args.slots, "decode")
         plan = SP.make_plan(cfg, cell, mesh)
@@ -103,15 +113,20 @@ def main():
             "us_per_token not comparable across codecs")
         _, per_tok = engine.decode_wire_stats()
         us_per_tok = dt / toks * 1e6
+        ps = engine.pool_stats()
         extra = ""
         if engine.spec_k > 0:
             mal = engine.mean_accepted_len
             _, vper_tok = engine.verify_wire_stats(mal)
             extra = (f" spec_k={engine.spec_k} accepted={mal:.2f} "
                      f"vwireKB/tok={vper_tok/1e3:.2f}")
+        peak_kb = ps["peak_pages_in_use"] * engine.cache.kv_page_bytes()
         print(f"serve/{codec},{us_per_tok:.1f},"
               f"tok/s={toks/dt:.1f} wireKB/tok={per_tok/1e3:.2f} "
-              f"steps={engine.decode_steps} slots={args.slots}{extra}")
+              f"steps={engine.decode_steps} slots={args.slots} "
+              f"pages={ps['peak_pages_in_use']}/{ps['num_pages']} "
+              f"kvKBpeak={peak_kb/1e3:.1f} "
+              f"kvKBdense={ps['kv_bytes_dense']/1e3:.1f}{extra}")
     return 0
 
 

@@ -56,6 +56,11 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=0,
                     help="cache length (0: prompt-len + gen)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV pool page size (positions per page)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV page pool size (0: dense-equivalent "
+                         "default — shrink it to make slots share)")
     ap.add_argument("--hnn-mode", default="hnn")
     ap.add_argument("--codec", default=None,
                     help="override cfg codec (none|int8|spike_fused|...)")
@@ -78,6 +83,8 @@ def main():
     max_seq = args.max_seq or args.prompt_len + args.gen
     ecfg = EngineConfig(num_slots=args.slots, max_seq=max_seq,
                         prefill_len=args.prompt_len,
+                        page_size=args.page_size,
+                        num_pages=args.num_pages,
                         top_k=args.top_k, top_p=args.top_p,
                         spec_k=args.spec_k)
 
@@ -107,15 +114,19 @@ def main():
     dt = time.time() - t0
     toks = engine.tokens_generated
     stats, per_tok = engine.decode_wire_stats()
-    alloc = engine.cache.allocator
+    ps = engine.pool_stats()
+    peak_kb = ps["peak_pages_in_use"] * engine.cache.kv_page_bytes() / 1e3
     print(f"{cfg.name} ({cfg.hnn_mode}/{cfg.codec}) mesh={args.mesh} "
           f"slots={args.slots}: served {len(results)} requests, "
           f"{toks} tokens in {dt*1e3:.0f}ms "
           f"({toks/max(dt, 1e-9):.1f} tok/s on CPU)")
     print(f"decode steps={engine.decode_steps}  "
           f"wire {per_tok/1e3:.1f}KB/token "
-          f"({dict(stats.counts)} collectives/step)  "
-          f"cache {alloc.total_pages} pages x {alloc.page_size} positions")
+          f"({dict(stats.counts)} collectives/step)")
+    print(f"kv pool: peak {ps['peak_pages_in_use']}/{ps['num_pages']} "
+          f"pages x {ps['page_size']} positions  "
+          f"mapped {peak_kb:.1f}KB at peak vs "
+          f"{ps['kv_bytes_dense']/1e3:.1f}KB dense per-slot reservation")
     if engine.spec_k > 0:
         mal = engine.mean_accepted_len
         _, vper_tok = engine.verify_wire_stats(mal)

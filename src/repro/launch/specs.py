@@ -169,6 +169,78 @@ def cache_specs(plan: CellPlan):
     return structs, specs
 
 
+def pages_per_slot(max_seq: int, page_size: int) -> int:
+    """Block-table width: pages a slot at full ``max_seq`` occupancy maps."""
+    return -(-max_seq // page_size)
+
+
+def default_num_pages(plan: CellPlan, page_size: int) -> int:
+    """Pool size that reproduces the old dense reservation exactly.
+
+    Per dp group: every local slot can map ``pages_per_slot`` pages
+    (rounded up to a tp multiple so the pool dim shards evenly over the
+    dp x tp devices).  With this default the pool can never exhaust
+    before the slot count does — byte-for-byte the old guarantee — and
+    shrinking ``num_pages`` below it is the knob paging buys.
+    """
+    pps = pages_per_slot(plan.cell.seq_len, page_size)
+    slots_loc = plan.cell.global_batch // plan.dp_size
+    per_group = -(-slots_loc * pps // plan.tp_size) * plan.tp_size
+    return per_group * plan.dp_size
+
+
+def _pool_axes(plan: CellPlan):
+    """Mesh axes the page-pool dim shards over: ALL of them (dp x tp).
+
+    Slots are batch-sharded over dp and each slot's pages are drawn from
+    its own dp group's contiguous page range (allocator invariant), so
+    sharding pages over dp+tp keeps every slot's pages on its own dp
+    group's tp shards — the flash-decode LSE combine stays over
+    ``plan.cp`` exactly as in the dense layout.
+    """
+    return tuple(plan.dp) + (plan.tp,)
+
+
+def paged_cache_specs(plan: CellPlan, page_size: int, num_pages: int):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the POOLED cache.
+
+    Attention KV leaves become a shared device page pool
+    ``[U, num_pages, page_size, Hkv, dh]`` with the page dim sharded
+    over dp x tp (see ``_pool_axes``); recurrent/SSM state leaves stay
+    slot-major — only attention KV pages (state cannot be paged: it is
+    O(1) per slot and every block reads all of it every step).
+    """
+    cfg = plan.cfg
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            "paged KV for encoder-decoder (cross_kv) serving: follow-on")
+    structs, specs = cache_specs(plan)
+    d_at = blocks_attn.attn_dims(cfg, plan.tp_size)
+    shape = (cfg.n_units, num_pages, page_size, d_at["Hkv"], d_at["dh"])
+    sp = P(None, _pool_axes(plan), None, None, None)
+    for i, kind in enumerate(cfg.pattern):
+        if kind in ("attn", "global", "local", "attn_moe"):
+            structs[f"pos{i}"]["kv"] = {
+                "k": jax.ShapeDtypeStruct(shape, cfg.dtype),
+                "v": jax.ShapeDtypeStruct(shape, cfg.dtype)}
+            specs[f"pos{i}"]["kv"] = {"k": sp, "v": sp}
+    return structs, specs
+
+
+def block_table_specs(plan: CellPlan, page_size: int):
+    """(ShapeDtypeStruct, PartitionSpec) of the per-slot block table.
+
+    ``[slots, pages_per_slot]`` int32 global page ids (-1 = unmapped),
+    slot dim batch-sharded like the tokens so each dp rank sees exactly
+    its local slots' rows; replicated over tp (every tp shard needs the
+    full row to find its resident pages).
+    """
+    B, S = plan.cell.global_batch, plan.cell.seq_len
+    pps = pages_per_slot(S, page_size)
+    return (jax.ShapeDtypeStruct((B, pps), jnp.int32),
+            P(_bspec(plan), None))
+
+
 def decode_input_specs(plan: CellPlan):
     """(inputs, specs) for one decode step: cache + token + pos."""
     cfg, cell = plan.cfg, plan.cell
@@ -182,24 +254,29 @@ def decode_input_specs(plan: CellPlan):
     return inputs, specs
 
 
-def serve_decode_input_specs(plan: CellPlan):
+def serve_decode_input_specs(plan: CellPlan, page_size: int,
+                             num_pages: int):
     """(inputs, specs) for one batched engine decode step.
 
-    Differs from ``decode_input_specs`` in the scheduler-facing inputs:
-    per-slot positions and sampling temperatures (batch-sharded like the
-    tokens) plus a replicated PRNG key.
+    Differs from ``decode_input_specs`` in the scheduler-facing inputs
+    (per-slot positions and sampling temperatures, batch-sharded like
+    the tokens, plus a replicated PRNG key) and in the cache layout:
+    the engine cache is the shared KV page pool + per-slot block table
+    (``paged_cache_specs`` / ``block_table_specs``).
     """
     cfg, cell = plan.cfg, plan.cell
     B = cell.global_batch
     bs = _bspec(plan)
-    cache, cache_sp = cache_specs(plan)
+    cache, cache_sp = paged_cache_specs(plan, page_size, num_pages)
+    bt, bt_sp = block_table_specs(plan, page_size)
     inputs = {"cache": cache,
               "token": jax.ShapeDtypeStruct((B,), jnp.int32),
               "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+              "bt": bt,
               "temp": jax.ShapeDtypeStruct((B,), jnp.float32),
               "key": jax.ShapeDtypeStruct((2,), jnp.uint32)}
     specs = {"cache": cache_sp, "token": P(bs), "pos": P(bs),
-             "temp": P(bs), "key": P()}
+             "bt": bt_sp, "temp": P(bs), "key": P()}
     return inputs, specs
 
 
@@ -213,23 +290,28 @@ def verify_shape_cell(max_seq: int, num_slots: int, spec_k: int) -> ShapeCell:
     return ShapeCell(f"serve_verify_k{spec_k}", max_seq, num_slots, "decode")
 
 
-def serve_verify_input_specs(plan: CellPlan, spec_k: int):
+def serve_verify_input_specs(plan: CellPlan, spec_k: int, page_size: int,
+                             num_pages: int):
     """(inputs, specs) for one batched speculative-verify step.
 
     Like ``serve_decode_input_specs`` but with K1 = spec_k+1 token
     columns per slot (last committed token + spec_k draft tokens) and a
     per-slot *base* position; the sampled-output token block is [B, K1].
+    The cache is the same page pool + block table as the decode step —
+    the two programs alternate over one donated buffer set.
     """
     cfg, cell = plan.cfg, plan.cell
     B = cell.global_batch
     bs = _bspec(plan)
-    cache, cache_sp = cache_specs(plan)
+    cache, cache_sp = paged_cache_specs(plan, page_size, num_pages)
+    bt, bt_sp = block_table_specs(plan, page_size)
     K1 = spec_k + 1
     inputs = {"cache": cache,
               "token": jax.ShapeDtypeStruct((B, K1), jnp.int32),
               "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+              "bt": bt,
               "temp": jax.ShapeDtypeStruct((B,), jnp.float32),
               "key": jax.ShapeDtypeStruct((2,), jnp.uint32)}
     specs = {"cache": cache_sp, "token": P(bs, None), "pos": P(bs),
-             "temp": P(bs), "key": P()}
+             "bt": bt_sp, "temp": P(bs), "key": P()}
     return inputs, specs

@@ -18,7 +18,8 @@ from jax import lax
 
 from ..core import boundary
 from . import common
-from .context import Context, cp_linear_index, cp_size, fsdp_gather
+from .context import (Context, cp_linear_index, cp_size, fsdp_gather,
+                      pool_linear_index, pool_local_pages)
 from .params import pdef, spike_pdefs
 
 
@@ -265,14 +266,86 @@ def mlp_fwd(p, x, ctx: Context, aux):
 
 
 # ---------------------------------------------------------------------------
+# paged KV: block-table indexed writes/gathers on the shared page pool
+# ---------------------------------------------------------------------------
+
+
+def _paged_kv_write(cache, bt, qpos, k_new, v_new, ctx: Context):
+    """Scatter new KV rows through the block table into the local pool
+    shard: ``pool[page, offset]`` with ``page = bt[slot, pos//psz]``.
+
+    cache {k,v} [P_loc, psz, Hkv, dh] (this shard's pages of the pool);
+    bt [B, PPS] int32 global page ids (-1 unmapped); qpos [B, K1]
+    absolute write positions; k_new/v_new [B, K1, Hkv, dh].
+
+    Writes whose page is unmapped, resident on another shard, or whose
+    position falls past the block table (>= PPS * psz) are DROPPED via
+    an out-of-bounds scatter index — never clipped into a live page.
+    An evicted slot (bt row all -1) therefore cannot corrupt a page
+    that was recycled to another slot, which the old slot-major layout
+    got for free from slot-private rows.  Valid (page, offset) targets
+    are unique across (slot, query): a slot's qpos are distinct and
+    live slots' page sets are disjoint (allocator invariant), so the
+    scatter needs no duplicate-resolution order.
+    """
+    ck, cv = cache["k"], cache["v"]
+    P_loc, psz = ck.shape[0], ck.shape[1]
+    PPS = bt.shape[1]
+    pj = qpos // psz                                        # [B, K1]
+    oj = qpos % psz
+    g = jnp.take_along_axis(bt, jnp.clip(pj, 0, PPS - 1), axis=1)
+    loc, _ = pool_local_pages(g, pool_linear_index(ctx), P_loc)
+    # a position past the block table (>= PPS * psz) must also drop
+    loc = jnp.where(pj < PPS, loc, P_loc)    # OOB index -> mode="drop"
+    ck = ck.at[loc, oj].set(k_new.astype(ck.dtype), mode="drop")
+    cv = cv.at[loc, oj].set(v_new.astype(cv.dtype), mode="drop")
+    return {"k": ck, "v": cv}
+
+
+def _paged_kv_gather(cache, bt, ctx: Context):
+    """Gather every local slot's resident pages, ordered by position.
+
+    cache {k,v} [P_loc, psz, Hkv, dh]; bt [B, PPS].  Returns
+    (k [B, PPS*psz, Hkv, dh], v likewise, valid [B, PPS*psz] bool) —
+    entry ``i`` of the gathered sequence IS absolute position ``i`` of
+    the slot, so the attention partial runs with ``shard_offset=0`` and
+    ``valid`` masks entries whose page is unmapped or lives on another
+    shard (those rows carry arbitrary pool data and must never score).
+    The gather spans the full block table on every shard: each shard
+    materializes [B, max_seq] gathered K/V + scores where the dense
+    seq-sharded layout touched only its [B, max_seq / cp] slice — a
+    cp-fold per-shard overhead on the decode step, deliberately traded
+    for the pooled memory layout at the small B x max_seq shapes the
+    engine serves.  A host-built compacted per-shard page list (like
+    the block table itself) would restore the 1/cp slice (ROADMAP
+    §Serving follow-on).
+    """
+    ck, cv = cache["k"], cache["v"]
+    P_loc, psz, Hkv, dh = ck.shape
+    B, PPS = bt.shape
+    loc, ok = pool_local_pages(bt, pool_linear_index(ctx), P_loc)
+    idx = jnp.minimum(loc, P_loc - 1)
+    kg = ck[idx].reshape(B, PPS * psz, Hkv, dh)
+    vg = cv[idx].reshape(B, PPS * psz, Hkv, dh)
+    return kg, vg, jnp.repeat(ok, psz, axis=1)
+
+
+# ---------------------------------------------------------------------------
 # forward: decode (one token, context-parallel KV)
 # ---------------------------------------------------------------------------
 
 
 def attn_decode_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn",
                     prefix=""):
-    """x [B_loc, 1, D] replicated over tp; cache {k,v} [B_loc, Ss, Hkv, dh]
-    seq-sharded over ctx.cp; pos scalar or [B_loc] per-slot positions.
+    """x [B_loc, 1, D] replicated over tp; pos scalar or [B_loc] per-slot
+    positions.  Two cache layouts, selected by ``aux["block_table"]``:
+
+      dense (single-request serve path): cache {k,v} [B_loc, Ss, Hkv, dh]
+        seq-sharded over ctx.cp, indexed ``cache[slot, pos]``;
+      paged (serving engine): cache {k,v} [P_loc, psz, Hkv, dh] — this
+        shard's pages of the shared pool — indexed ``cache[page, offset]``
+        through the per-slot block table rows in ``aux["block_table"]``.
+
     Returns (x', cache')."""
     cfg = ctx.cfg
     d = attn_dims(cfg, ctx.tp_size)
@@ -316,31 +389,45 @@ def attn_decode_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn",
         if not d["kv_rep"] and ctx.tp_size > 1:
             k_new = lax.all_gather(k_new, ctx.tp, axis=2, tiled=True)
             v_new = lax.all_gather(v_new, ctx.tp, axis=2, tiled=True)
-        # per-slot cache write: each slot lands at its own position, and
-        # only on the cp shard that owns it (batched serving scatter)
-        Ss = cache["k"].shape[1]
-        off = cp_linear_index(ctx) * Ss
-        in_range = (pos >= off) & (pos < off + Ss)               # [B]
-        loc = jnp.clip(pos - off, 0, Ss - 1)                     # [B]
-        bidx = jnp.arange(B)
-        k_cur = cache["k"][bidx, loc]                            # [B,Hkv,dh]
-        v_cur = cache["v"][bidx, loc]
-        sel = in_range[:, None, None]
-        k_w = jnp.where(sel, k_new[:, 0].astype(cache["k"].dtype), k_cur)
-        v_w = jnp.where(sel, v_new[:, 0].astype(cache["v"].dtype), v_cur)
-        cache = {"k": cache["k"].at[bidx, loc].set(k_w),
-                 "v": cache["v"].at[bidx, loc].set(v_w)}
+        bt = aux.get("block_table")
+        if bt is not None:
+            # paged: route the write through the slot's block-table row
+            cache = _paged_kv_write(cache, bt, pos[:, None], k_new, v_new,
+                                    ctx)
+        else:
+            # dense per-slot cache write: each slot lands at its own
+            # position, only on the cp shard that owns it
+            Ss = cache["k"].shape[1]
+            off = cp_linear_index(ctx) * Ss
+            in_range = (pos >= off) & (pos < off + Ss)           # [B]
+            loc = jnp.clip(pos - off, 0, Ss - 1)                 # [B]
+            bidx = jnp.arange(B)
+            k_cur = cache["k"][bidx, loc]                        # [B,Hkv,dh]
+            v_cur = cache["v"][bidx, loc]
+            sel = in_range[:, None, None]
+            k_w = jnp.where(sel, k_new[:, 0].astype(cache["k"].dtype), k_cur)
+            v_w = jnp.where(sel, v_new[:, 0].astype(cache["v"].dtype), v_cur)
+            cache = {"k": cache["k"].at[bidx, loc].set(k_w),
+                     "v": cache["v"].at[bidx, loc].set(v_w)}
     else:
         if ctx.tp_size > 1:
             q = lax.all_gather(q, ctx.tp, axis=2, tiled=True)
 
-    Ss = cache["k"].shape[1]
-    off = cp_linear_index(ctx) * Ss
     window = cfg.window if kind == "local" else 0
-    eff_pos = pos if not is_cross else jnp.full((B,), 10 ** 9, jnp.int32)
+    bt = None if is_cross else aux.get("block_table")
+    if bt is not None:
+        # paged: gather K/V through the block table (position-ordered,
+        # shard_offset 0, non-resident entries masked)
+        k_s, v_s, kv_valid = _paged_kv_gather(cache, bt, ctx)
+        off, eff_pos = 0, pos
+    else:
+        k_s, v_s, kv_valid = cache["k"], cache["v"], None
+        off = cp_linear_index(ctx) * cache["k"].shape[1]
+        eff_pos = pos if not is_cross else jnp.full((B,), 10 ** 9,
+                                                    jnp.int32)
     o, lse = common.decode_attention_partial(
-        q[:, 0], cache["k"], cache["v"], pos=eff_pos, shard_offset=off,
-        window=window, cap=cfg.attn_softcap)
+        q[:, 0], k_s, v_s, pos=eff_pos, shard_offset=off,
+        window=window, cap=cfg.attn_softcap, kv_valid=kv_valid)
     o = common.combine_decode_partials(o, lse, ctx.cp)
 
     # output projection: local head slice, psum over tp
@@ -361,9 +448,11 @@ def attn_decode_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn",
 
 def attn_verify_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn"):
     """Batched k-token verify: x [B, K1, D] replicated over tp — the last
-    committed token followed by spec_k draft tokens per slot; cache {k,v}
-    [B, Ss, Hkv, dh] seq-sharded over ctx.cp; pos [B] per-slot *base*
-    positions (query j sits at pos+j).
+    committed token followed by spec_k draft tokens per slot; pos [B]
+    per-slot *base* positions (query j sits at pos+j).  Cache layout is
+    dense ([B, Ss, Hkv, dh] seq-sharded over ctx.cp) or the shared page
+    pool ([P_loc, psz, Hkv, dh] + ``aux["block_table"]``), exactly as in
+    ``attn_decode_fwd``.
 
     Every per-token op is shared with ``attn_decode_fwd`` (same norms,
     same ``wire_roundtrip`` spike boundary, same projections), so under
@@ -410,28 +499,39 @@ def attn_verify_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn"):
         k_new = lax.all_gather(k_new, ctx.tp, axis=2, tiled=True)
         v_new = lax.all_gather(v_new, ctx.tp, axis=2, tiled=True)
 
-    # scatter the K1 new KV rows one position at a time (K1 is static and
-    # small): sequential writes keep the update duplicate-free when
-    # out-of-range clips collide with in-range positions
-    Ss = cache["k"].shape[1]
-    off = cp_linear_index(ctx) * Ss
-    bidx = jnp.arange(B)
-    ck, cv = cache["k"], cache["v"]
-    for j in range(K1):
-        pj = qpos[:, j]
-        in_range = (pj >= off) & (pj < off + Ss)
-        loc = jnp.clip(pj - off, 0, Ss - 1)
-        sel = in_range[:, None, None]
-        k_w = jnp.where(sel, k_new[:, j].astype(ck.dtype), ck[bidx, loc])
-        v_w = jnp.where(sel, v_new[:, j].astype(cv.dtype), cv[bidx, loc])
-        ck = ck.at[bidx, loc].set(k_w)
-        cv = cv.at[bidx, loc].set(v_w)
-    cache = {"k": ck, "v": cv}
-
+    bt = aux.get("block_table")
     window = cfg.window if kind == "local" else 0
+    if bt is not None:
+        # paged: one duplicate-free scatter for all K1 positions (their
+        # (page, offset) targets are distinct by construction), then
+        # gather the slot's pages back position-ordered
+        cache = _paged_kv_write(cache, bt, qpos, k_new, v_new, ctx)
+        k_s, v_s, kv_valid = _paged_kv_gather(cache, bt, ctx)
+        off = 0
+    else:
+        # dense: scatter the K1 new KV rows one position at a time (K1
+        # is static and small) — sequential writes keep the update
+        # duplicate-free when out-of-range clips collide with in-range
+        # positions
+        Ss = cache["k"].shape[1]
+        off = cp_linear_index(ctx) * Ss
+        bidx = jnp.arange(B)
+        ck, cv = cache["k"], cache["v"]
+        for j in range(K1):
+            pj = qpos[:, j]
+            in_range = (pj >= off) & (pj < off + Ss)
+            loc = jnp.clip(pj - off, 0, Ss - 1)
+            sel = in_range[:, None, None]
+            k_w = jnp.where(sel, k_new[:, j].astype(ck.dtype), ck[bidx, loc])
+            v_w = jnp.where(sel, v_new[:, j].astype(cv.dtype), cv[bidx, loc])
+            ck = ck.at[bidx, loc].set(k_w)
+            cv = cv.at[bidx, loc].set(v_w)
+        cache = {"k": ck, "v": cv}
+        k_s, v_s, kv_valid = cache["k"], cache["v"], None
+
     o, lse = common.verify_attention_partial(
-        q, cache["k"], cache["v"], pos=qpos, shard_offset=off,
-        window=window, cap=cfg.attn_softcap)
+        q, k_s, v_s, pos=qpos, shard_offset=off,
+        window=window, cap=cfg.attn_softcap, kv_valid=kv_valid)
     o = common.combine_decode_partials(o, lse, ctx.cp)
 
     r = lax.axis_index(ctx.tp)

@@ -177,14 +177,18 @@ def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
 
 
 def decode_attention_partial(q, k_shard, v_shard, *, pos, shard_offset,
-                             window=0, cap=0.0):
-    """One decode step over a *sequence shard* of the KV cache.
+                             window=0, cap=0.0, kv_valid=None):
+    """One decode step over a *shard* of the KV cache.
 
     q [B, Hq, dh]; k_shard/v_shard [B, Ss, Hkv, dh]; pos: current absolute
     position (scalar, or [B] per-slot positions for batched serving);
     shard_offset: absolute position of this shard's first cache slot.
-    Returns (out [B, Hq, dh] — unnormalized partial, lse [B, Hq]) for
-    cross-shard LSE combination.
+    ``kv_valid`` (optional [B, Ss] bool): per-slot validity of each cache
+    entry — the paged layout gathers K/V through a block table, so
+    entries from pages not resident on this shard (or not mapped at all)
+    must be masked out of the softmax.
+    Returns (out [B, Hq, dh] — locally normalized partial, lse [B, Hq])
+    for cross-shard LSE combination.
 
     Implemented as the K1=1 case of ``verify_attention_partial`` so the
     speculative-verify path's greedy bit-identity with vanilla decode is
@@ -197,14 +201,14 @@ def decode_attention_partial(q, k_shard, v_shard, *, pos, shard_offset,
         posb = jnp.broadcast_to(posb, (B,))
     o, lse = verify_attention_partial(
         q[:, None], k_shard, v_shard, pos=posb[:, None],
-        shard_offset=shard_offset, window=window, cap=cap)
+        shard_offset=shard_offset, window=window, cap=cap,
+        kv_valid=kv_valid)
     return o[:, 0], lse[:, 0]
 
 
 def verify_attention_partial(q, k_shard, v_shard, *, pos, shard_offset,
-                             window=0, cap=0.0):
-    """K1-token speculative-verify step over a *sequence shard* of the KV
-    cache.
+                             window=0, cap=0.0, kv_valid=None):
+    """K1-token speculative-verify step over a *shard* of the KV cache.
 
     The multi-query sibling of ``decode_attention_partial``: q carries
     K1 = spec_k+1 query tokens per slot (the last committed token plus
@@ -216,8 +220,12 @@ def verify_attention_partial(q, k_shard, v_shard, *, pos, shard_offset,
 
     q [B, K1, Hq, dh]; k_shard/v_shard [B, Ss, Hkv, dh]; pos [B, K1]
     absolute per-query positions; shard_offset: absolute position of this
-    shard's first cache slot.  Returns (out [B, K1, Hq, dh] — locally
-    normalized partial, lse [B, K1, Hq]) for cross-shard LSE combination.
+    shard's first cache slot (0 for the paged layout, whose gather is
+    already position-ordered per slot); ``kv_valid`` (optional [B, Ss]
+    bool) masks cache entries that are not this slot's data (unmapped /
+    non-resident block-table pages).  Returns (out [B, K1, Hq, dh] —
+    locally normalized partial, lse [B, K1, Hq]) for cross-shard LSE
+    combination.
     """
     B, K1, Hq, dh = q.shape
     _, Ss, Hkv, _ = k_shard.shape
@@ -235,6 +243,8 @@ def verify_attention_partial(q, k_shard, v_shard, *, pos, shard_offset,
     mask = k_pos[None, None, None, :] <= posb
     if window:
         mask &= (posb - k_pos[None, None, None, :]) < window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, None, :]
     s = jnp.where(mask, s, -1e30)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])

@@ -81,3 +81,43 @@ def cp_size(ctx: Context) -> int:
     for a in ctx.cp:
         n *= lax.axis_size(a)
     return n
+
+
+def axes_linear_index(axes):
+    """Linearized (major-to-minor) shard index over named mesh axes."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in axes:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def pool_linear_index(ctx: Context):
+    """Linearized shard index over the KV page-pool axes (dp x tp).
+
+    The serving page pool shards its page dim over ALL mesh axes: the
+    allocator draws a slot's pages from the slot's own dp group's
+    contiguous page range, so pages-over-(dp, tp) keeps reads/writes
+    local to the owning dp group while the pool's HBM footprint still
+    splits across every device.  Always iterates the mesh axis names
+    (not ``ctx.dp_size``, which ``replicate_weights`` rewrites to 1 to
+    disable FSDP gathers — the pool stays sharded regardless).
+    """
+    return axes_linear_index((*ctx.dp, ctx.tp))
+
+
+def pool_local_pages(page_ids, pool_index, pages_local):
+    """Map global KV-pool page ids onto THIS shard's local pool slice.
+
+    The single source of truth for the page-id -> shard-local-index
+    contract (global page p lives on shard ``p // pages_local`` at row
+    ``p % pages_local``); every pool reader/writer (decode/verify
+    gather+scatter, admit insert) must come through here so a layout
+    change cannot desynchronize them.  Returns ``(loc, ok)``: where
+    ``ok`` (mapped and resident here), ``loc`` is the local row; else
+    ``loc`` is ``pages_local`` — one past the end, so scatters with
+    ``mode="drop"`` discard it and gathers clamp it with
+    ``jnp.minimum(loc, pages_local - 1)`` + mask on ``ok``.
+    """
+    loc = page_ids - pool_index * pages_local
+    ok = (page_ids >= 0) & (loc >= 0) & (loc < pages_local)
+    return jnp.where(ok, loc, pages_local), ok

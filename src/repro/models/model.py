@@ -518,7 +518,14 @@ def forward_prefill(params, batch, ctx: Context, last_pos=None):
 def forward_decode(params, cache, token, pos, ctx: Context, aux_extra=None):
     """One decode step.  token [B_loc] int32; pos scalar int32 or
     [B_loc] per-slot positions (batched serving).
-    Returns (logits_local [B_loc, V_loc], new_cache)."""
+
+    Two attention-cache layouts: dense slot-major (``cache[slot, pos]``,
+    the single-request serve path) or — when ``aux_extra`` carries a
+    ``"block_table"`` row per local slot — the serving engine's shared
+    KV page pool, indexed ``cache[page, offset]`` through that table
+    (see ``blocks_attn.attn_decode_fwd``).  Recurrent-state leaves are
+    slot-major in both.  Returns (logits_local [B_loc, V_loc],
+    new_cache)."""
     cfg = ctx.cfg
     ctx = ctx.with_(mode="decode")
     aux = dict(aux_extra or {})
@@ -606,9 +613,12 @@ def forward_verify(params, cache, tokens, pos, ctx: Context, aux_extra=None):
 
     tokens [B, K1] int32 — per slot, the last committed token followed by
     spec_k draft tokens; pos [B] int32 — the base cache position of each
-    slot's first token.  KV for position pos+j is written for every j;
-    acceptance (and occupancy rollback of rejected positions) is the
-    scheduler's job.  Returns (logits_local [B, K1, V_loc], new_cache);
+    slot's first token.  KV for position pos+j is written for every j
+    (through ``aux_extra["block_table"]`` when the cache is the engine's
+    shared page pool — the scheduler must have mapped pages covering
+    pos..pos+K1-1 first); acceptance (and page-exact rollback of
+    rejected positions) is the scheduler's job.
+    Returns (logits_local [B, K1, V_loc], new_cache);
     logits[:, j] condition on tokens[:, :j+1] — greedy-argmax of column j
     is the verify target for draft j+1.
     """

@@ -1,14 +1,18 @@
-"""Batched serving: continuous batching, paged KV, on-device sampling,
-and self-drafting speculative decoding over the spike-coded wire."""
+"""Batched serving: continuous batching, block-table paged KV (shared
+device page pool), on-device sampling, and self-drafting speculative
+decoding over the spike-coded wire."""
 from .draft import NGramDrafter
-from .engine import (WARMUP_RID, EngineConfig, EngineConfigError, Request,
-                     SchedulerStall, ServingEngine, make_engine_decode_step,
-                     make_engine_prefill_step, make_engine_verify_step)
+from .engine import (WARMUP_RID, EngineConfig, Request, ServingEngine,
+                     make_engine_decode_step, make_engine_prefill_step,
+                     make_engine_verify_step)
+from .errors import (CacheOverflowError, EngineConfigError,
+                     PagePoolExhausted, SchedulerStall, SlotsExhausted)
 from .kv_cache import PagedKVCache, SlotAllocator
 from .sampling import SamplingConfig, sample, sample_verify
 
-__all__ = ["EngineConfig", "EngineConfigError", "NGramDrafter", "Request",
-           "SchedulerStall", "ServingEngine", "PagedKVCache",
-           "SlotAllocator", "SamplingConfig", "WARMUP_RID", "sample",
+__all__ = ["CacheOverflowError", "EngineConfig", "EngineConfigError",
+           "NGramDrafter", "PagePoolExhausted", "PagedKVCache", "Request",
+           "SamplingConfig", "SchedulerStall", "ServingEngine",
+           "SlotAllocator", "SlotsExhausted", "WARMUP_RID", "sample",
            "sample_verify", "make_engine_decode_step",
            "make_engine_prefill_step", "make_engine_verify_step"]

@@ -1,7 +1,8 @@
 """Continuous-batching serving engine over the spike-coded decode path.
 
 One ``ServingEngine`` owns a fixed pool of request slots (the decode
-batch), a slot-major ``PagedKVCache``, and up to four compiled programs:
+batch), a block-table ``PagedKVCache`` (shared KV page pool; slot-major
+recurrent state), and up to four compiled programs:
 
   prefill : B=1, fixed-length right-padded prompt -> slot-shaped cache
             + the first sampled token (logits taken at the true last
@@ -28,8 +29,15 @@ batch), a slot-major ``PagedKVCache``, and up to four compiled programs:
 Scheduling is classic continuous batching: every ``step()`` first admits
 queued requests into free slots (prefill-then-decode interleaving), then
 runs a single batched decode step; finished requests (max tokens, EOS,
-or context full) retire immediately and their slot returns to the free
-list for the next admit.
+or context full) retire immediately and their slot AND its KV pages
+return to the free pool for the next admit.  Admission maps only
+``ceil(prompt_len / page_size)`` pages; each decode/verify step first
+``ensure``s pages covering the positions it will write (alloc-on-
+extend), raising typed ``PagePoolExhausted`` when the pool — not the
+slot count — is the binding limit.  ``EngineConfig.num_pages`` sizes
+the pool independently of ``num_slots * max_seq``; the default
+reproduces the old dense reservation, so shrinking it is how the same
+HBM holds more concurrent slots.
 
 Every decode-path activation collective carries the spike/int8 wire
 (``repro.core.boundary.coded_psum`` / ``wire_roundtrip``); the only fp
@@ -66,27 +74,23 @@ from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ShapeCell
 from ..launch.serve import strip_dp_specs
-from ..launch.specs import (cache_specs, make_context, make_plan,
-                            serve_decode_input_specs,
+from ..launch.specs import (cache_specs, default_num_pages, make_context,
+                            make_plan, serve_decode_input_specs,
                             serve_verify_input_specs, verify_shape_cell)
 from ..launch.train import shard_params_specs
 from ..models import model as M
 from . import sampling
 from .draft import NGramDrafter
+from .errors import (CacheOverflowError, EngineConfigError,
+                     PagePoolExhausted, SchedulerStall, SlotsExhausted)
 from .kv_cache import PagedKVCache
 from .sampling import SamplingConfig
 
-
-class EngineConfigError(ValueError):
-    """Unserveable engine configuration (bad mesh/shape/family combo).
-
-    Raised from ``ServingEngine.__init__`` instead of ``assert`` so the
-    checks survive ``python -O``.
-    """
-
-
-class SchedulerStall(RuntimeError):
-    """``run`` exhausted ``max_steps`` with requests still in flight."""
+__all__ = ["CacheOverflowError", "EngineConfig", "EngineConfigError",
+           "PagePoolExhausted", "Request", "SchedulerStall",
+           "ServingEngine", "SlotsExhausted", "WARMUP_RID",
+           "make_engine_decode_step", "make_engine_prefill_step",
+           "make_engine_verify_step"]
 
 
 #: Reserved request id for ``warmup``'s throwaway request.  A fresh
@@ -111,6 +115,8 @@ class EngineConfig:
     max_seq: int = 128
     prefill_len: int = 0           # 0 -> max_seq
     page_size: int = 64
+    num_pages: int = 0             # KV pool size (0 -> dense-equivalent:
+    #                                every slot can map pages_per_slot)
     top_k: int = 0
     top_p: float = 0.0
     eos_id: Optional[int] = None
@@ -152,18 +158,24 @@ def make_engine_prefill_step(cfg, plan, mesh, scfg: SamplingConfig,
 
 
 def make_engine_decode_step(cfg, plan, mesh, scfg: SamplingConfig,
+                            page_size, num_pages,
                             replicate_weights=False):
-    """decode(params, cache, token[B], pos[B], temp[B], key) ->
-    (next_token [B], cache) — cache donated."""
+    """decode(params, cache, token[B], pos[B], bt[B,PPS], temp[B], key)
+    -> (next_token [B], cache) — cache donated.
+
+    ``cache`` is the shared KV page pool (+ slot-major state leaves);
+    ``bt`` the per-slot block table the attention gathers K/V through.
+    """
     _, pspecs, _ = shard_params_specs(cfg, plan)
     ctx = make_context(plan, "decode")
     if replicate_weights:
         pspecs = strip_dp_specs(pspecs)
         ctx = ctx.with_(dp_size=1)
-    _, ispecs = serve_decode_input_specs(plan)
+    _, ispecs = serve_decode_input_specs(plan, page_size, num_pages)
 
-    def step(params, cache, token, pos, temp, key):
-        logits, cache = M.forward_decode(params, cache, token, pos, ctx)
+    def step(params, cache, token, pos, bt, temp, key):
+        logits, cache = M.forward_decode(params, cache, token, pos, ctx,
+                                         aux_extra={"block_table": bt})
         tok = sampling.sample(logits, key, temp, tp=ctx.tp,
                               tp_size=ctx.tp_size, cfg=scfg)
         return tok, cache
@@ -171,29 +183,32 @@ def make_engine_decode_step(cfg, plan, mesh, scfg: SamplingConfig,
     fn = jax.shard_map(
         step, mesh=mesh,
         in_specs=(pspecs, ispecs["cache"], ispecs["token"], ispecs["pos"],
-                  ispecs["temp"], ispecs["key"]),
+                  ispecs["bt"], ispecs["temp"], ispecs["key"]),
         out_specs=(ispecs["token"], ispecs["cache"]), check_vma=False)
     return jax.jit(fn, donate_argnums=(1,))
 
 
 def make_engine_verify_step(cfg, plan, mesh, scfg: SamplingConfig, spec_k,
+                            page_size, num_pages,
                             replicate_weights=False):
-    """verify(params, cache, tokens[B,K1], pos[B], temp[B], key) ->
-    (tokens_out [B,K1], cache) — cache donated.
+    """verify(params, cache, tokens[B,K1], pos[B], bt[B,PPS], temp[B],
+    key) -> (tokens_out [B,K1], cache) — cache donated.
 
     One batched forward over all K1 = spec_k+1 speculative positions of
     every slot; column j of ``tokens_out`` is the model's (greedy or
-    sampled) next token after committing ``tokens[:, :j+1]``.
+    sampled) next token after committing ``tokens[:, :j+1]``.  Reads and
+    writes the same page pool + block table as the decode step.
     """
     _, pspecs, _ = shard_params_specs(cfg, plan)
     ctx = make_context(plan, "decode")
     if replicate_weights:
         pspecs = strip_dp_specs(pspecs)
         ctx = ctx.with_(dp_size=1)
-    _, ispecs = serve_verify_input_specs(plan, spec_k)
+    _, ispecs = serve_verify_input_specs(plan, spec_k, page_size, num_pages)
 
-    def step(params, cache, tokens, pos, temp, key):
-        logits, cache = M.forward_verify(params, cache, tokens, pos, ctx)
+    def step(params, cache, tokens, pos, bt, temp, key):
+        logits, cache = M.forward_verify(params, cache, tokens, pos, ctx,
+                                         aux_extra={"block_table": bt})
         tok = sampling.sample_verify(logits, key, temp, tp=ctx.tp,
                                      tp_size=ctx.tp_size, cfg=scfg)
         return tok, cache
@@ -201,7 +216,7 @@ def make_engine_verify_step(cfg, plan, mesh, scfg: SamplingConfig, spec_k,
     fn = jax.shard_map(
         step, mesh=mesh,
         in_specs=(pspecs, ispecs["cache"], ispecs["token"], ispecs["pos"],
-                  ispecs["temp"], ispecs["key"]),
+                  ispecs["bt"], ispecs["temp"], ispecs["key"]),
         out_specs=(ispecs["token"], ispecs["cache"]), check_vma=False)
     return jax.jit(fn, donate_argnums=(1,))
 
@@ -234,6 +249,17 @@ class ServingEngine:
                 f"tp_size={self.plan.tp_size}")
         if ecfg.spec_k < 0:
             raise EngineConfigError(f"spec_k={ecfg.spec_k} must be >= 0")
+        if ecfg.page_size < 1:
+            raise EngineConfigError(f"page_size={ecfg.page_size} must be "
+                                    ">= 1")
+        shards = self.plan.dp_size * self.plan.tp_size
+        self.num_pages = (ecfg.num_pages
+                          or default_num_pages(self.plan, ecfg.page_size))
+        if self.num_pages % shards != 0:
+            raise EngineConfigError(
+                f"num_pages={self.num_pages} must divide over the "
+                f"dp x tp devices ({shards}) so the page pool shards "
+                "evenly")
         cell_pre = ShapeCell("serve_admit", prefill_len, 1, "prefill")
         self.plan_pre = make_plan(cfg, cell_pre, mesh)
         self.prefill_len = prefill_len
@@ -248,7 +274,8 @@ class ServingEngine:
         self._prefill = make_engine_prefill_step(
             cfg, self.plan_pre, mesh, scfg, ecfg.replicate_weights)
         self._decode = make_engine_decode_step(
-            cfg, self.plan, mesh, scfg, ecfg.replicate_weights)
+            cfg, self.plan, mesh, scfg, ecfg.page_size, self.num_pages,
+            ecfg.replicate_weights)
         self._verify = None
         if self.spec_k > 0:
             self.plan_ver = make_plan(
@@ -256,9 +283,9 @@ class ServingEngine:
                                        self.spec_k), mesh)
             self._verify = make_engine_verify_step(
                 cfg, self.plan_ver, mesh, scfg, self.spec_k,
-                ecfg.replicate_weights)
+                ecfg.page_size, self.num_pages, ecfg.replicate_weights)
         self.cache = PagedKVCache(self.plan, self.plan_pre, mesh,
-                                  ecfg.page_size)
+                                  ecfg.page_size, self.num_pages)
 
         n = ecfg.num_slots
         self._tokens = np.zeros(n, np.int32)
@@ -266,6 +293,8 @@ class ServingEngine:
         self._temp = np.zeros(n, np.float32)
         self._slots: list[Optional[_Slot]] = [None] * n
         self._queue: deque[Request] = deque()
+        self._retired: list = []       # finished (request, tokens) pairs
+        #                                awaiting pickup by step()
         self._key = jax.random.PRNGKey(ecfg.seed)
         self._tick = 0
         self.tokens_generated = 0
@@ -288,21 +317,28 @@ class ServingEngine:
                 "recurrent-state families need prompt_len == prefill_len "
                 f"({self.prefill_len}); right-padding would corrupt the "
                 "prefill-final state")
+        alloc = self.cache.allocator
+        if alloc.pages_needed(P_len) > alloc.pages_per_group:
+            raise ValueError(
+                f"prompt needs {alloc.pages_needed(P_len)} KV pages but a "
+                f"pool group only holds {alloc.pages_per_group} "
+                f"(num_pages={self.num_pages}): the request could never "
+                "be admitted")
         self._queue.append(req)
 
     def _next_key(self):
         self._tick += 1
         return jax.random.fold_in(self._key, self._tick)
 
-    def _admit(self, req: Request, finished: list):
+    def _admit(self, req: Request):
         P_len = len(req.prompt)
         toks = np.zeros((1, self.prefill_len), np.int32)
         toks[0, :P_len] = np.asarray(req.prompt, np.int32)
         first, pre_cache = self._prefill(
             self.params, toks, np.array([P_len - 1], np.int32),
             np.array([req.temperature], np.float32), self._next_key())
-        # occupancy counts cache positions written: the prompt now, the
-        # generated tokens as each decode step lands them (extend below)
+        # admit maps ceil(P_len/page_size) pages — O(prompt), not
+        # O(max_seq); each decode step maps the next page on demand
         slot = self.cache.admit(pre_cache, P_len)
         first = int(np.asarray(first)[0])
         drafter = None
@@ -313,17 +349,21 @@ class ServingEngine:
         self._pos[slot] = P_len
         self._temp[slot] = req.temperature
         self.tokens_generated += 1
-        self._maybe_retire(slot, first, finished)
+        self._maybe_retire(slot, first)
 
-    def _maybe_retire(self, slot: int, tok: int, finished: list):
+    def _maybe_retire(self, slot: int, tok: int):
         st = self._slots[slot]
         done = (len(st.out) >= st.req.max_new_tokens
                 or (self.ecfg.eos_id is not None and tok == self.ecfg.eos_id)
                 or self._pos[slot] >= self.ecfg.max_seq)
         if done:
+            # evict zeroes the slot's block-table row (-1), so the stale
+            # pos/token the retired row still carries into the next
+            # batched step can only produce dropped writes — a recycled
+            # page can never be corrupted by its previous owner
             self.cache.evict(slot)
             self._slots[slot] = None
-            finished.append((st.req, st.out))
+            self._retired.append((st.req, st.out))
 
     # -- scheduling --------------------------------------------------------
 
@@ -338,19 +378,33 @@ class ServingEngine:
     def step(self) -> list:
         """Admit what fits, then one batched decode (or k-token verify)
         step.  Returns the requests finished this step as
-        (request, tokens) pairs."""
-        finished: list = []
-        while self._queue and self.cache.allocator.num_free:
-            self._admit(self._queue.popleft(), finished)
+        (request, tokens) pairs.
+
+        Admission is gated on BOTH a free slot and free pool pages for
+        the prompt (``can_admit``); a request that doesn't fit stays
+        queued.  Before the device step, every active slot maps pages
+        covering the positions the step will write (alloc-on-extend) —
+        if a live slot cannot grow because its pool group is empty,
+        ``PagePoolExhausted`` propagates: the pool, not the slot count,
+        is the binding limit, and the operator sized ``num_pages`` below
+        the workload's concurrent-context demand.
+        """
+        while self._queue and self.cache.allocator.can_admit(
+                len(self._queue[0].prompt)):
+            self._admit(self._queue.popleft())
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
-            return finished
+            return self._drain_retired()
         if self.spec_k > 0:
-            self._spec_step(active, finished)
-            return finished
+            self._spec_step(active)
+            return self._drain_retired()
+        for i in active:
+            # the step writes KV at position pos: map its page first
+            self.cache.ensure(i, int(self._pos[i]) + 1)
         nxt, self.cache.buffers = self._decode(
             self.params, self.cache.buffers, self._tokens, self._pos,
-            self._temp, self._next_key())
+            jnp.asarray(self.cache.block_table), self._temp,
+            self._next_key())
         nxt = np.asarray(nxt)
         self.decode_steps += 1
         for i in active:
@@ -358,12 +412,23 @@ class ServingEngine:
             self._slots[i].out.append(tok)
             self._tokens[i] = tok
             self._pos[i] += 1
-            self.cache.allocator.extend(i)
             self.tokens_generated += 1
-            self._maybe_retire(i, tok, finished)
-        return finished
+            self._maybe_retire(i, tok)
+        return self._drain_retired()
 
-    def _spec_step(self, active, finished):
+    def _drain_retired(self) -> list:
+        """Hand the retirements accumulated so far to the caller.
+
+        Retired (request, tokens) pairs buffer on the engine, not in a
+        ``step()``-local, so a typed mid-step failure (e.g.
+        ``PagePoolExhausted`` from an ``ensure``) cannot discard results
+        of requests that already finished earlier in the same step —
+        they surface from the next successful ``step()``.
+        """
+        out, self._retired = self._retired, []
+        return out
+
+    def _spec_step(self, active):
         """One speculative step: draft k per slot, verify all k+1
         positions in one batched forward, commit the longest accepted
         prefix plus the model's correction token, roll back the rest.
@@ -378,17 +443,20 @@ class ServingEngine:
         drafts = np.zeros((n, k), np.int32)
         for i in active:
             drafts[i] = self._slots[i].drafter.propose(k)
+            # the verify step writes KV at pos..pos+k (clipped at the
+            # context end): map those pages before launching; the
+            # rejected tail's pages roll back once acceptance is known
+            self.cache.ensure(i, min(int(self._pos[i]) + k + 1,
+                                     self.ecfg.max_seq))
         tok_in = np.concatenate([self._tokens[:, None], drafts], axis=1)
         out, self.cache.buffers = self._verify(
             self.params, self.cache.buffers, tok_in, self._pos,
-            self._temp, self._next_key())
+            jnp.asarray(self.cache.block_table), self._temp,
+            self._next_key())
         out = np.asarray(out)                                  # [n, k+1]
         self.decode_steps += 1
         for i in active:
             st = self._slots[i]
-            # the verify step wrote KV at pos..pos+k; account them all,
-            # then roll the rejected tail back once acceptance is known
-            self.cache.allocator.extend(i, k + 1)
             a = 0
             while a < k and drafts[i, a] == out[i, a]:
                 a += 1
@@ -409,7 +477,7 @@ class ServingEngine:
             self.cache.rollback(i, int(self._pos[i]))
             self.spec_commits += committed
             self.spec_verifies += 1
-            self._maybe_retire(i, int(self._tokens[i]), finished)
+            self._maybe_retire(i, int(self._tokens[i]))
 
     @property
     def mean_accepted_len(self) -> float:
@@ -457,7 +525,7 @@ class ServingEngine:
         from ..launch import roofline as RL
         lowered = program.lower(
             self.params, self.cache.buffers, ins["token"], ins["pos"],
-            ins["temp"], ins["key"])
+            ins["bt"], ins["temp"], ins["key"])
         stats = RL.parse_collectives(lowered.compile().as_text())
         ndev = self.plan.dp_size * self.plan.tp_size
         per_tok = stats.wire_bytes * ndev / max(tokens_per_step, 1e-9)
@@ -470,7 +538,8 @@ class ServingEngine:
         bytes of ONE decode step, scaled to total bytes per generated
         token across the mesh.
         """
-        ins, _ = serve_decode_input_specs(self.plan)
+        ins, _ = serve_decode_input_specs(self.plan, self.ecfg.page_size,
+                                          self.num_pages)
         return self._wire_stats(self._decode, ins, self.ecfg.num_slots)
 
     def verify_wire_stats(self, accepted_len: float = 1.0):
@@ -486,6 +555,27 @@ class ServingEngine:
         """
         if self._verify is None:
             raise EngineConfigError("verify_wire_stats: spec_k == 0")
-        ins, _ = serve_verify_input_specs(self.plan_ver, self.spec_k)
+        ins, _ = serve_verify_input_specs(self.plan_ver, self.spec_k,
+                                          self.ecfg.page_size,
+                                          self.num_pages)
         return self._wire_stats(self._verify, ins,
                                 self.ecfg.num_slots * accepted_len)
+
+    def pool_stats(self) -> dict:
+        """KV pool occupancy + bytes, next to the dense baseline.
+
+        ``kv_bytes_dense`` is what the pre-paging layout reserved
+        (every slot charged ``pages_per_slot`` pages up front) — the
+        ``kv_bytes_pool``/``kv_bytes_dense`` ratio is the HBM the block
+        table frees for more slots at equal hardware.
+        """
+        alloc = self.cache.allocator
+        return {
+            "page_size": alloc.page_size,
+            "num_pages": alloc.num_pages,
+            "pages_in_use": alloc.pages_in_use,
+            "peak_pages_in_use": self.cache.peak_pages_in_use,
+            "kv_bytes_mapped": self.cache.kv_bytes_mapped(),
+            "kv_bytes_pool": self.cache.kv_bytes_pool(),
+            "kv_bytes_dense": self.cache.kv_bytes_dense_reservation(),
+        }

@@ -1,0 +1,58 @@
+"""Typed serving-engine error family.
+
+Every failure mode the engine or its allocator can hit is a distinct
+exception type (never a bare ``assert`` or ``RuntimeError``): asserts
+vanish under ``python -O``, and callers — schedulers, admission
+controllers, tests — need to tell "the configuration can never serve"
+from "the pool is full right now" without string-matching messages.
+
+Hierarchy:
+
+  ValueError
+    EngineConfigError   unserveable (mesh/shape/family) configuration
+    CacheOverflowError  a slot asked to grow past ``max_seq``
+  RuntimeError
+    SchedulerStall      ``run`` hit ``max_steps`` with work in flight
+    SlotsExhausted      no free request slot (admission backpressure)
+    PagePoolExhausted   no free KV page in the slot's pool group
+
+``SlotsExhausted`` means "queue the request"; ``PagePoolExhausted`` on
+admission means the same, but raised from a mid-flight ``ensure`` it
+means the operator sized ``num_pages`` below the workload's concurrent
+context demand — the pool, not the slot count, is the binding limit.
+"""
+from __future__ import annotations
+
+
+class EngineConfigError(ValueError):
+    """Unserveable engine configuration (bad mesh/shape/family combo).
+
+    Raised from ``ServingEngine.__init__`` instead of ``assert`` so the
+    checks survive ``python -O``.
+    """
+
+
+class CacheOverflowError(ValueError):
+    """A slot was asked to grow beyond ``max_seq`` cache positions.
+
+    Replaces the old silent ``min(len + n, max_seq)`` clamp in
+    ``SlotAllocator.extend``: a clamp hides scheduler bugs (the engine
+    must retire a slot at ``max_seq``, never keep decoding into it).
+    """
+
+
+class SchedulerStall(RuntimeError):
+    """``run`` exhausted ``max_steps`` with requests still in flight."""
+
+
+class SlotsExhausted(RuntimeError):
+    """No free request slot; the scheduler should queue the request."""
+
+
+class PagePoolExhausted(RuntimeError):
+    """No free KV page (in the requesting slot's pool group).
+
+    Distinct from ``SlotsExhausted``: slots may be free while the page
+    pool is not — that is exactly the regime block-table paging enables
+    (``num_pages`` sized below ``num_slots * pages_per_slot``).
+    """

@@ -1,23 +1,41 @@
-"""Paged/slotted KV-and-state cache for the batched serving engine.
+"""Pooled KV page cache + slot-major state cache for the serving engine.
 
-Device layout is slot-major: every cache leaf carries the full slot
-batch — attention KV ``[U, slots, S_max, Hkv, dh]`` seq-sharded over the
-context-parallel axes, recurrent state (SSM / xLSTM / RWKV) ``[U, slots,
-...]`` — allocated once at engine start and donated through every decode
-step, so serving runs at constant memory with zero per-request
-allocation.
+Device layout is a true block-table design: attention KV lives in ONE
+shared page pool ``[U, num_pages, page_size, Hkv, dh]`` whose page dim
+is sharded over all mesh axes (dp x tp), and each request slot maps an
+ordered list of pages through a per-slot block-table row
+``[pages_per_slot]`` of global page ids (-1 = unmapped).  Decode/verify
+attention gathers K/V through that table (``cache[page, offset]``), so
+a slot's HBM footprint is ``ceil(len / page_size)`` pages — NOT a dense
+``max_seq`` reservation — and ``num_pages`` caps concurrent context,
+independent of the slot count.  Recurrent/SSM state (mamba / xLSTM /
+RWKV) stays slot-major ``[U, slots, ...]``: it is O(1) per slot and
+every block reads all of it every step, so paging buys it nothing.
+Buffers are allocated once at engine start and donated through every
+step — steady-state serving is still allocation-free.
 
 The host side is a ``SlotAllocator``: a free-list of request slots plus
-page-granular occupancy accounting (``page_size`` positions per page).
-Pages are an accounting/scheduling granularity — the device tensors are
-slot-granular; true block-table indirection inside the attention kernel
-is a follow-on (ROADMAP §Serving).
+a REAL page allocator — global free list (partitioned into one region
+per dp group, because slots are batch-sharded over dp and a slot's
+pages must live on its own dp group's tp shards), per-slot page lists,
+alloc-on-extend (``ensure``), and page-exact ``rollback``/``free`` that
+return the tail's pages to the pool.  Exhaustion is typed:
+``SlotsExhausted`` vs ``PagePoolExhausted`` (see ``serving.errors``).
 
-``insert`` splices a freshly prefilled single-request cache into a slot
-in place (donated buffers): state leaves are a slot-row write; KV leaves
-additionally re-align the prefill's seq sharding onto the decode cache's
-when the prefill length is shorter than ``max_seq`` (an all_gather of
-the one request's KV over the cp axis — the natural admit cost).
+``insert`` splices a freshly prefilled single-request cache into the
+pool: state leaves are a slot-row write; KV leaves all_gather the one
+request's seq-sharded prefill KV over tp (the natural admit cost) and
+scatter it page-block-wise into the slot's freshly mapped pages —
+out-of-shard / unmapped targets drop, so only ``ceil(prompt_len /
+page_size)`` pages are ever touched.
+
+Safety invariant (why stale pool rows can never leak between slots): a
+slot's visible positions ``[0, len)`` are always positions the slot
+itself wrote — prefill fills its pages at admit, decode/verify writes
+run contiguously upward from there, and pages are only mapped/unmapped
+at the tail — while every read masks entries beyond the slot's own
+positions, so a recycled page's previous contents are overwritten
+before they could ever score.
 """
 from __future__ import annotations
 
@@ -29,52 +47,176 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..launch.specs import CellPlan, cache_specs
+from ..launch.specs import (CellPlan, cache_specs, default_num_pages,
+                            paged_cache_specs, pages_per_slot)
+from ..models.context import axes_linear_index, pool_local_pages
+from .errors import CacheOverflowError, PagePoolExhausted, SlotsExhausted
 
 _KV_KEYS = ("kv", "cross_kv")
 
 
 class SlotAllocator:
-    """Free-list slot allocation + page-granular occupancy accounting."""
+    """Free-list slot allocation + a real shared-pool page allocator.
 
-    def __init__(self, num_slots: int, max_seq: int, page_size: int = 64):
-        assert num_slots > 0 and page_size > 0
+    ``num_pages`` defaults to ``num_slots * pages_per_slot`` (the dense
+    reservation — can never exhaust before the slots do); sizing it
+    smaller is the paging payoff: slots share the pool and long-context
+    slots no longer reserve ``max_seq`` up front.  ``num_groups`` > 1
+    partitions the pool into equal contiguous regions and pins each
+    slot to the region of its dp group (``slot // slots_per_group``),
+    matching the device-side page sharding over dp x tp.
+    """
+
+    def __init__(self, num_slots: int, max_seq: int, page_size: int = 64,
+                 num_pages: int | None = None, num_groups: int = 1):
+        if num_slots <= 0 or page_size <= 0 or max_seq <= 0:
+            raise ValueError((num_slots, max_seq, page_size))
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.page_size = page_size
-        self.pages_per_slot = -(-max_seq // page_size)
+        self.pages_per_slot = pages_per_slot(max_seq, page_size)
+        if num_pages is None:
+            num_pages = num_slots * self.pages_per_slot
+        if num_pages <= 0 or num_pages % num_groups != 0 \
+                or num_slots % num_groups != 0:
+            raise ValueError(
+                f"num_pages={num_pages} / num_slots={num_slots} must be "
+                f"positive multiples of num_groups={num_groups}")
+        self.num_pages = num_pages
+        self.num_groups = num_groups
+        self.pages_per_group = num_pages // num_groups
+        self._slots_per_group = num_slots // num_groups
         self._free = deque(range(num_slots))
+        self._free_pages = [
+            deque(range(g * self.pages_per_group,
+                        (g + 1) * self.pages_per_group))
+            for g in range(num_groups)]
         self._len = np.zeros(num_slots, np.int64)   # current seq occupancy
+        self._pages: list[list[int]] = [[] for _ in range(num_slots)]
+        #: [num_slots, pages_per_slot] int32 global page ids, -1 unmapped —
+        #: passed verbatim as the device block table every step
+        self.block_table = np.full((num_slots, self.pages_per_slot), -1,
+                                   np.int32)
+
+    # -- sizing / introspection -------------------------------------------
+
+    def group_of(self, slot: int) -> int:
+        return slot // self._slots_per_group
 
     @property
     def num_free(self) -> int:
         return len(self._free)
 
+    def free_pages_in_group(self, group: int) -> int:
+        return len(self._free_pages[group])
+
+    def pages_needed(self, seq_len: int) -> int:
+        return -(-seq_len // self.page_size)
+
+    def pages_used(self, slot: int) -> int:
+        return len(self._pages[slot])
+
+    @property
+    def total_pages(self) -> int:
+        return self.num_pages
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(p) for p in self._pages)
+
+    # -- page mapping (internal) ------------------------------------------
+
+    def _map_pages(self, slot: int, n: int):
+        free = self._free_pages[self.group_of(slot)]
+        if n > len(free):
+            raise PagePoolExhausted(
+                f"slot {slot} (group {self.group_of(slot)}) needs {n} "
+                f"page(s); {len(free)} free of {self.pages_per_group} in "
+                f"its group ({self.pages_in_use}/{self.num_pages} mapped "
+                f"pool-wide)")
+        for _ in range(n):
+            page = free.popleft()
+            self.block_table[slot, len(self._pages[slot])] = page
+            self._pages[slot].append(page)
+
+    def _unmap_tail(self, slot: int, keep: int):
+        free = self._free_pages[self.group_of(slot)]
+        while len(self._pages[slot]) > keep:
+            page = self._pages[slot].pop()
+            self.block_table[slot, len(self._pages[slot])] = -1
+            free.append(page)
+
+    # -- slot lifecycle ----------------------------------------------------
+
+    def can_admit(self, seq_len: int) -> bool:
+        """True iff some free slot's group can map ``seq_len`` tokens."""
+        if not 0 < seq_len <= self.max_seq:
+            return False
+        need = self.pages_needed(seq_len)
+        return any(need <= len(self._free_pages[self.group_of(s)])
+                   for s in self._free)
+
     def alloc(self, seq_len: int) -> int:
-        """Claim a slot for a request currently holding ``seq_len`` tokens."""
-        if not self._free:
-            raise RuntimeError("no free slots")
+        """Claim a slot + map pages for ``seq_len`` already-held tokens.
+
+        Picks the first free slot (FIFO) whose group has enough free
+        pages.  Typed failures: ``SlotsExhausted`` when no slot is free,
+        ``PagePoolExhausted`` when slots are free but no group can map
+        the request — the caller queues in either case.
+        """
         if not 0 < seq_len <= self.max_seq:
             raise ValueError(f"seq_len {seq_len} not in (0, {self.max_seq}]")
-        slot = self._free.popleft()
+        if not self._free:
+            raise SlotsExhausted(f"all {self.num_slots} slots in use")
+        need = self.pages_needed(seq_len)
+        for slot in self._free:
+            if need <= len(self._free_pages[self.group_of(slot)]):
+                break
+        else:
+            raise PagePoolExhausted(
+                f"{need} page(s) for seq_len {seq_len}: no free slot's "
+                f"group has them ({self.pages_in_use}/{self.num_pages} "
+                "mapped)")
+        self._free.remove(slot)
+        self._map_pages(slot, need)
         self._len[slot] = seq_len
         return slot
 
+    def ensure(self, slot: int, new_len: int):
+        """Alloc-on-extend: grow ``slot``'s mapping to cover ``new_len``
+        positions (no-op if already covered).  The engine calls this
+        BEFORE launching a decode/verify step so every position the step
+        writes has a mapped page.  Raises ``CacheOverflowError`` past
+        ``max_seq`` (the old silent clamp hid scheduler bugs) and
+        ``PagePoolExhausted`` when the slot's group has no page left.
+        """
+        if self._len[slot] <= 0:
+            raise ValueError(f"ensure on free slot {slot}")
+        if new_len > self.max_seq:
+            raise CacheOverflowError(
+                f"slot {slot}: {new_len} positions > max_seq "
+                f"{self.max_seq}")
+        self._map_pages(slot,
+                        self.pages_needed(new_len) - self.pages_used(slot))
+        self._len[slot] = max(self._len[slot], new_len)
+
     def extend(self, slot: int, n: int = 1):
-        self._len[slot] = min(self._len[slot] + n, self.max_seq)
+        self.ensure(slot, int(self._len[slot]) + n)
 
     def rollback(self, slot: int, new_len: int):
-        """Roll a slot's occupancy back to ``new_len`` positions.
+        """Roll a slot's occupancy back to ``new_len`` positions,
+        returning the rejected tail's pages to the pool (page-exact).
 
-        Speculative decoding writes KV for every draft position before
-        acceptance is known; the scheduler calls this to return the
-        rejected tail's pages.  Only shrinking (or no-op) is legal —
-        growth goes through ``extend``.
+        Speculative decoding maps+writes KV for every draft position
+        before acceptance is known; the scheduler calls this to shrink
+        to the committed length.  Only shrinking (or no-op) is legal —
+        growth goes through ``ensure``/``extend``.
         """
         if not 0 < new_len <= self._len[slot]:
             raise ValueError(
                 f"rollback slot {slot} to {new_len}: occupancy is "
                 f"{int(self._len[slot])} (must shrink to a positive length)")
+        self._unmap_tail(slot, self.pages_needed(new_len))
         self._len[slot] = new_len
 
     def free(self, slot: int):
@@ -83,19 +225,9 @@ class SlotAllocator:
             # would put the slot on the free list twice and hand it to
             # two requests at once
             raise ValueError(f"slot {slot} already free")
+        self._unmap_tail(slot, 0)
         self._len[slot] = 0
         self._free.append(slot)
-
-    def pages_used(self, slot: int) -> int:
-        return int(-(-self._len[slot] // self.page_size))
-
-    @property
-    def total_pages(self) -> int:
-        return self.num_slots * self.pages_per_slot
-
-    @property
-    def pages_in_use(self) -> int:
-        return int(sum(self.pages_used(s) for s in range(self.num_slots)))
 
 
 def _is_kv_path(path) -> bool:
@@ -109,9 +241,9 @@ def _init_leaf(path, s):
     return jnp.zeros(s.shape, s.dtype)
 
 
-def make_init_fn(plan: CellPlan, mesh):
-    """Build the zeroed slot-major cache, sharded per the decode plan."""
-    structs, specs = cache_specs(plan)
+def make_init_fn(plan: CellPlan, mesh, page_size: int, num_pages: int):
+    """Build the zeroed pool+state cache, sharded per the decode plan."""
+    structs, specs = paged_cache_specs(plan, page_size, num_pages)
     shardings = jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
                              is_leaf=lambda x: isinstance(x, P))
 
@@ -123,25 +255,34 @@ def make_init_fn(plan: CellPlan, mesh):
     return jax.jit(init, out_shardings=shardings)
 
 
-def make_insert_fn(plan: CellPlan, plan_pre: CellPlan, mesh):
-    """insert(cache, pre_cache, slot) -> cache (donated, in place).
+def make_insert_fn(plan: CellPlan, plan_pre: CellPlan, mesh,
+                   page_size: int, num_pages: int):
+    """insert(cache, pre_cache, slot, pages) -> cache (donated, in place).
 
     ``pre_cache`` is the B=1 cache returned by the engine prefill step
-    (seq length ``plan_pre.cell.seq_len``); ``slot`` a replicated int32.
+    (seq length ``plan_pre.cell.seq_len``); ``slot`` a replicated int32;
+    ``pages`` the slot's freshly mapped block-table row (replicated
+    int32 [pages_per_slot], -1 for entries beyond the prompt).  State
+    leaves are a slot-row write; KV leaves gather the request's prefill
+    KV over tp and scatter it page-block-wise into the pool — only the
+    mapped pages are written (unmapped / non-resident targets drop), so
+    an admit touches O(prompt_len), not O(max_seq), pool bytes.
     """
     assert plan.cp == (plan.tp,) and plan_pre.cp == (plan_pre.tp,), (
         "engine admit requires tp-only context parallelism on both the "
         "prefill and decode plans")
-    _, cspecs = cache_specs(plan)
+    _, cspecs = paged_cache_specs(plan, page_size, num_pages)
     _, pspecs = cache_specs(plan_pre)
     num_slots = plan.cell.global_batch
     dp_size = plan.dp_size if plan.batch_sharded else 1
     slots_loc = num_slots // dp_size
     S_pre = plan_pre.cell.seq_len
-    S_max = plan.cell.seq_len
     tp = plan.tp
+    pool_axes = tuple(plan.dp) + (plan.tp,)
+    psz = page_size
 
-    def ins(cache, pre, slot):
+    def ins(cache, pre, slot, pages):
+        pidx = axes_linear_index(pool_axes)        # pool shard index
         if dp_size > 1:
             r_dp = jnp.zeros((), jnp.int32)
             for a in plan.dp:
@@ -153,63 +294,121 @@ def make_insert_fn(plan: CellPlan, plan_pre: CellPlan, mesh):
 
         def merge(path, c, p):
             p0 = p[:, 0]                              # drop the B=1 dim
-            cur = lax.dynamic_index_in_dim(c, ls, axis=1, keepdims=False)
-            if _is_kv_path(path) and S_pre != S_max:
-                # prefill KV is seq-sharded at S_pre granularity; gather
-                # the single request's KV and re-slice at S_max granularity
+            if _is_kv_path(path):
+                # c: pool shard [U, P_loc, psz, Hkv, dh]; gather the one
+                # request's full prefill KV, re-slice it into page
+                # blocks, scatter through the slot's fresh table row
+                P_loc = c.shape[1]
                 full = lax.all_gather(p0, tp, axis=1, tiled=True)
-                Ls = c.shape[2]
-                gpos = lax.axis_index(tp) * Ls + jnp.arange(Ls)
+                pps = pages.shape[0]
+                gpos = jnp.arange(pps * psz)
                 src = jnp.take(full, jnp.minimum(gpos, S_pre - 1), axis=1)
-                valid = (gpos < S_pre)[None, :, None, None]
-                row = jnp.where(own & valid, src.astype(c.dtype), cur)
-            else:
-                row = jnp.where(own, p0.astype(c.dtype), cur)
+                src = src.reshape(c.shape[0], pps, psz, *c.shape[3:])
+                loc, _ = pool_local_pages(pages, pidx, P_loc)
+                return c.at[:, loc].set(src.astype(c.dtype), mode="drop")
+            cur = lax.dynamic_index_in_dim(c, ls, axis=1, keepdims=False)
+            row = jnp.where(own, p0.astype(c.dtype), cur)
             return c.at[:, ls].set(row)
 
         return jax.tree_util.tree_map_with_path(merge, cache, pre)
 
-    fn = jax.shard_map(ins, mesh=mesh, in_specs=(cspecs, pspecs, P()),
+    fn = jax.shard_map(ins, mesh=mesh, in_specs=(cspecs, pspecs, P(), P()),
                        out_specs=cspecs, check_vma=False)
     return jax.jit(fn, donate_argnums=(0,))
 
 
 class PagedKVCache:
-    """Slot-major device cache + host-side slot/page allocator."""
+    """Shared device KV page pool + slot-major state + host allocator."""
 
     def __init__(self, plan: CellPlan, plan_pre: CellPlan, mesh,
-                 page_size: int = 64):
+                 page_size: int = 64, num_pages: int | None = None):
         self.plan = plan
-        self.allocator = SlotAllocator(plan.cell.global_batch,
-                                       plan.cell.seq_len, page_size)
-        self.buffers = make_init_fn(plan, mesh)()
-        self._insert = make_insert_fn(plan, plan_pre, mesh)
+        self.page_size = page_size
+        self.num_pages = (default_num_pages(plan, page_size)
+                          if num_pages is None else num_pages)
+        groups = plan.dp_size if plan.batch_sharded else 1
+        self.allocator = SlotAllocator(
+            plan.cell.global_batch, plan.cell.seq_len, page_size,
+            num_pages=self.num_pages, num_groups=groups)
+        self.buffers = make_init_fn(plan, mesh, page_size, self.num_pages)()
+        self._insert = make_insert_fn(plan, plan_pre, mesh, page_size,
+                                      self.num_pages)
+        self.peak_pages_in_use = 0
+
+    def _note_peak(self):
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.allocator.pages_in_use)
+
+    @property
+    def block_table(self) -> np.ndarray:
+        """Host block table [slots, pages_per_slot] int32, -1 unmapped."""
+        return self.allocator.block_table
 
     def admit(self, pre_cache, seq_len: int) -> int:
-        """Allocate a slot and splice a prefilled cache into it."""
+        """Allocate a slot, map ``ceil(seq_len/page_size)`` pages, and
+        splice the prefilled cache into them."""
         slot = self.allocator.alloc(seq_len)
-        self.buffers = self._insert(self.buffers, pre_cache,
-                                    jnp.asarray(slot, jnp.int32))
+        self._note_peak()
+        self.buffers = self._insert(
+            self.buffers, pre_cache, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(self.allocator.block_table[slot], jnp.int32))
         return slot
 
+    def ensure(self, slot: int, new_len: int):
+        """Map pages (alloc-on-extend) so positions < ``new_len`` are
+        writable; called before every decode/verify step."""
+        self.allocator.ensure(slot, new_len)
+        self._note_peak()
+
     def evict(self, slot: int):
+        """Retire a slot: all its pages return to the pool and its block
+        table row zeroes to -1, so any in-flight write the retired slot
+        shape still carries is dropped on device."""
         self.allocator.free(slot)
 
     def rollback(self, slot: int, new_len: int):
-        """Position-range rollback after rejected speculative drafts.
+        """Page-exact rollback after rejected speculative drafts.
 
-        Returns the occupancy (page accounting) of cache positions
-        ``new_len..`` to the allocator.  The device-side KV rows for the
-        rejected range are left in place deliberately: they sit strictly
-        beyond the slot's committed position, so the per-position causal
-        mask keeps every future query from attending to them, and the
-        next verify window (which starts exactly at ``new_len``)
-        overwrites them before they could ever become visible.
+        Returns the pages beyond ``ceil(new_len/page_size)`` to the
+        pool.  The device-side KV rows for the rejected range are left
+        in place deliberately: rows in still-mapped pages sit strictly
+        beyond the slot's committed position (masked until the next
+        verify window overwrites them), and rows in unmapped pages are
+        unreachable — the table row is -1, and a future owner of the
+        recycled page overwrites every position before exposing it.
         """
         self.allocator.rollback(slot, new_len)
 
-    def bytes_per_slot(self) -> int:
+    # -- memory accounting -------------------------------------------------
+
+    def kv_page_bytes(self) -> int:
+        """Device bytes of ONE pool page summed over layers/units."""
         per = 0
-        for leaf in jax.tree.leaves(self.buffers):
-            per += leaf.nbytes // leaf.shape[1]
+        for path, leaf in jax.tree_util.tree_leaves_with_path(self.buffers):
+            if _is_kv_path(path):
+                per += leaf.nbytes // self.num_pages
+        return per
+
+    def kv_bytes_mapped(self) -> int:
+        """KV bytes actually backing live slots right now."""
+        return self.allocator.pages_in_use * self.kv_page_bytes()
+
+    def kv_bytes_pool(self) -> int:
+        """Total pool capacity in bytes (the new HBM budget knob)."""
+        return self.num_pages * self.kv_page_bytes()
+
+    def kv_bytes_dense_reservation(self) -> int:
+        """What the old slot-major layout reserved: every slot charged
+        ``pages_per_slot`` pages up front, idle or not."""
+        return (self.allocator.num_slots * self.allocator.pages_per_slot
+                * self.kv_page_bytes())
+
+    def state_bytes_per_slot(self) -> int:
+        """Slot-major (recurrent state) bytes per slot — unchanged by
+        paging, reported so the pool numbers aren't mistaken for the
+        whole cache."""
+        per = 0
+        for path, leaf in jax.tree_util.tree_leaves_with_path(self.buffers):
+            if not _is_kv_path(path):
+                per += leaf.nbytes // leaf.shape[1]
         return per

@@ -418,6 +418,55 @@ def scenario_serving_spec_parity():
               f"steps={spec.decode_steps}/{vanilla.decode_steps}")
 
 
+def scenario_serving_paged_mixed():
+    """Block-table paging payoff on the (2, 4) mesh: short prompts share
+    the KV page pool with one long slot, the pool sized BELOW the dense
+    per-slot reservation (16 vs 24 pages), and the token streams are
+    identical to a dense-equivalent (full-pool) engine.  Pages shard
+    over dp x tp while slots batch-shard over dp, so this also covers
+    the group-partitioned allocator against real device placement."""
+    from repro.configs import get_config
+    from repro.configs.reduced import reduced
+    from repro.launch import train as TR
+    from repro.launch.specs import ShapeCell, make_plan
+    from repro.serving import EngineConfig, Request, ServingEngine
+    mesh = mesh24()
+    cfg = reduced(get_config("qwen1.5-0.5b", hnn_mode="ann")).replace(
+        dtype=jnp.float32, codec="none")
+    cell = ShapeCell("serve_decode", 48, 4, "decode")
+    plan = make_plan(cfg, cell, mesh)
+    params = TR.init_sharded_params(cfg, plan, mesh, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    long_p = list(rng.randint(0, 256, 32))
+    shorts = [list(rng.randint(0, 256, 8)) for _ in range(5)]
+
+    def reqs():
+        rs = [Request(rid=0, prompt=long_p, max_new_tokens=8)]
+        rs += [Request(rid=i + 1, prompt=p, max_new_tokens=8)
+               for i, p in enumerate(shorts)]
+        return rs
+
+    kw = dict(num_slots=4, max_seq=48, prefill_len=32, page_size=8)
+    small = ServingEngine(cfg, mesh, params, EngineConfig(**kw,
+                                                          num_pages=16))
+    res_s = small.run(reqs())
+    dense = ServingEngine(cfg, mesh, params, EngineConfig(**kw))
+    res_d = dense.run(reqs())
+    for rid in res_d:
+        assert res_s[rid] == res_d[rid], (rid, res_d[rid], res_s[rid])
+    ps = small.pool_stats()
+    # the shrunk pool really is smaller than the dense reservation and
+    # the workload peaked within it; everything drained back
+    assert ps["num_pages"] == 16 < dense.num_pages
+    assert ps["kv_bytes_pool"] < ps["kv_bytes_dense"]
+    assert 0 < ps["peak_pages_in_use"] <= 16
+    assert ps["pages_in_use"] == 0 and ps["kv_bytes_mapped"] == 0
+    assert (small.cache.block_table == -1).all()
+    print(f"paged mixed OK peak={ps['peak_pages_in_use']}/16 "
+          f"poolMB={ps['kv_bytes_pool']/1e6:.2f} "
+          f"denseMB={ps['kv_bytes_dense']/1e6:.2f}")
+
+
 def scenario_serving_spec_recurrent_fallback():
     """Recurrent-state families cannot roll back: the engine must force
     spec_k=0 and still serve correctly."""

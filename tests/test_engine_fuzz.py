@@ -65,6 +65,7 @@ def _assert_drained(engine):
     assert alloc.num_free == NUM_SLOTS, "slot leak"
     assert alloc.pages_in_use == 0, "page leak"
     assert (alloc._len == 0).all(), "stale occupancy"
+    assert (alloc.block_table == -1).all(), "stale block-table mapping"
 
 
 def _check_schedule(schedule):
@@ -117,12 +118,116 @@ def test_fixed_schedule_single_and_short():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(st.lists(st.tuples(st.integers(1, PREFILL_LEN),
                           st.integers(1, 8)),
                 min_size=1, max_size=2 * NUM_SLOTS + 1))
 def test_fuzz_schedules_match_solo_and_leak_free(schedule):
     _check_schedule(schedule)
+
+
+# ---------------------------------------------------------------------------
+# block-table paging: O(page_size) admits + typed pool exhaustion
+# ---------------------------------------------------------------------------
+
+
+def test_admit_maps_prompt_pages_not_max_seq():
+    """Acceptance: admitting a ``prompt_len == page_size`` request maps
+    O(page_size) KV bytes — ONE page — while the old slot-major layout
+    charged the slot its full ``max_seq`` reservation up front."""
+    from repro.serving import Request
+    _, batched, _, _ = _engines()
+    cache = batched.cache
+    page_size = cache.allocator.page_size
+    batched._admit(Request(rid=0, prompt=list(range(1, page_size + 1)),
+                           max_new_tokens=4))
+    assert not batched._retired
+    assert cache.allocator.pages_in_use == 1
+    assert cache.kv_bytes_mapped() == cache.kv_page_bytes() > 0
+    # dense reservation would have charged pages_per_slot pages NOW
+    dense_slot = cache.allocator.pages_per_slot * cache.kv_page_bytes()
+    assert cache.kv_bytes_mapped() * cache.allocator.pages_per_slot \
+        == dense_slot
+    assert cache.kv_bytes_mapped() < dense_slot
+    # drain so the module-shared engine stays clean for other tests
+    while not batched.idle:
+        batched.step()
+    _assert_drained(batched)
+
+
+def test_hybrid_family_mixes_paged_kv_and_slot_major_state():
+    """A hybrid (attention + mamba) cache tree carries pool-shaped KV
+    leaves and slot-major state leaves through the same insert/decode/
+    evict cycle: only attention KV is paged, recurrent state stays
+    slot-major, and the engine still drains page-clean."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.configs.reduced import reduced
+    from repro.launch import specs as SP, train as TR
+    from repro.launch.mesh import make_mesh
+    from repro.serving import EngineConfig, Request, ServingEngine
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(get_config("jamba-1.5-large-398b",
+                             hnn_mode="ann")).replace(
+        dtype=jnp.float32, codec="none")
+    params = TR.init_sharded_params(
+        cfg, SP.make_plan(cfg, ShapeCell("serve_decode", 32, 2, "decode"),
+                          mesh), mesh, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, mesh, params, EngineConfig(
+        num_slots=2, max_seq=32, prefill_len=16, page_size=8))
+    # pool leaves exist (attn layers) AND slot-major state leaves exist
+    assert eng.cache.kv_page_bytes() > 0
+    assert eng.cache.state_bytes_per_slot() > 0
+    rng = np.random.RandomState(0)
+    res = eng.run([Request(rid=i, prompt=list(rng.randint(0, 256, 16)),
+                           max_new_tokens=6) for i in range(3)])
+    assert len(res) == 3 and all(len(v) == 6 for v in res.values())
+    alloc = eng.cache.allocator
+    assert alloc.pages_in_use == 0 and (alloc.block_table == -1).all()
+
+
+def test_page_pool_exhaustion_is_typed_and_pool_bound():
+    """``PagePoolExhausted`` fires when (and only when) the PAGE POOL is
+    the binding limit: slots are still free, but a live slot's growth
+    has no page left to map.  Built on a deliberately undersized pool
+    (3 pages < pages_per_slot * num_slots = 12)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.configs.reduced import reduced
+    from repro.launch import specs as SP, train as TR
+    from repro.launch.mesh import make_mesh
+    from repro.serving import (EngineConfig, PagePoolExhausted, Request,
+                               ServingEngine)
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(get_config("qwen1.5-0.5b", hnn_mode="ann")).replace(
+        dtype=jnp.float32, codec="none")
+    params = TR.init_sharded_params(
+        cfg, SP.make_plan(cfg, ShapeCell("serve_decode", MAX_SEQ,
+                                         NUM_SLOTS, "decode"), mesh),
+        mesh, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, mesh, params, EngineConfig(
+        num_slots=NUM_SLOTS, max_seq=MAX_SEQ, prefill_len=PREFILL_LEN,
+        page_size=8, num_pages=1))
+    # a prompt that could NEVER fit the 1-page pool is refused at submit
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=9, prompt=[5] * 16, max_new_tokens=1))
+    # an 8-token prompt (1 page) admits; the first decode step then
+    # needs a second page for position 8 and must raise the typed pool
+    # exhaustion even though 2 of 3 slots are still free
+    eng.submit(Request(rid=0, prompt=[5] * 8, max_new_tokens=16))
+    with pytest.raises(PagePoolExhausted):
+        for _ in range(16):
+            eng.step()
+    assert eng.cache.allocator.num_free == NUM_SLOTS - 1
+    assert issubclass(PagePoolExhausted, RuntimeError)
 
 
 # ---------------------------------------------------------------------------

@@ -4,12 +4,13 @@ dist_scenarios.py for why multi-device runs out-of-process)."""
 import numpy as np
 import pytest
 
+from _hyp import given, settings, st
 from _ref_sampling import host_reference_probs
 from test_distributed import run
 
 
 # ---------------------------------------------------------------------------
-# host-side slot/page allocator (no devices involved)
+# host-side slot + page-pool allocator (no devices involved)
 # ---------------------------------------------------------------------------
 
 
@@ -76,9 +77,11 @@ def test_slot_allocator_evict_admit_no_stale_occupancy():
 
 def test_slot_allocator_extend_matches_positions():
     """``extend`` accounting tracks the engine's ``_pos`` invariant:
-    after admit at P tokens and n decode commits, occupancy == P + n
-    (clipped at max_seq)."""
-    from repro.serving import SlotAllocator
+    after admit at P tokens and n decode commits, occupancy == P + n.
+    Crossing ``max_seq`` is a typed ``CacheOverflowError`` — the old
+    silent clamp hid scheduler bugs (a slot must retire at max_seq,
+    never keep decoding into it)."""
+    from repro.serving import CacheOverflowError, SlotAllocator
     a = SlotAllocator(num_slots=1, max_seq=16, page_size=4)
     s = a.alloc(5)
     pos = 5
@@ -86,35 +89,167 @@ def test_slot_allocator_extend_matches_positions():
         a.extend(s)
         pos += 1
         assert int(a._len[s]) == pos
-    a.extend(s, 10)                      # would cross max_seq: clips
-    assert int(a._len[s]) == 16
+    with pytest.raises(CacheOverflowError):
+        a.extend(s, 10)                  # would cross max_seq: typed
+    assert int(a._len[s]) == 13          # ...and state is untouched
     assert a.pages_used(s) == 4
+    assert issubclass(CacheOverflowError, ValueError)
 
 
 def test_slot_allocator_rollback_restores_occupancy():
-    """Speculative accept/rollback: extend by the k+1 written positions,
-    roll back to the committed length — occupancy lands exactly there."""
+    """Speculative accept/rollback: ``ensure`` maps the k+1 positions a
+    verify step writes, rollback returns the rejected tail — occupancy
+    AND page mapping land exactly at the committed length."""
     from repro.serving import SlotAllocator
     a = SlotAllocator(num_slots=2, max_seq=32, page_size=4)
     s = a.alloc(10)
     k = 3
-    a.extend(s, k + 1)                   # verify wrote pos 10..13
+    a.ensure(s, 10 + k + 1)              # verify writes pos 10..13
     assert int(a._len[s]) == 14
     a.rollback(s, 12)                    # committed 2 of 4
     assert int(a._len[s]) == 12 and a.pages_used(s) == 3
     # rejecting everything but the fixup token
-    a.extend(s, k + 1)
+    a.ensure(s, 12 + k + 1)
     a.rollback(s, 13)
     assert int(a._len[s]) == 13
-    # near max_seq the extend clips; rollback still restores exactly
-    a.extend(s, 100)
+    # near max_seq the engine clips its ensure; rollback still exact
+    a.ensure(s, min(13 + 100, 32))
     assert int(a._len[s]) == 32
     a.rollback(s, 14)
-    assert int(a._len[s]) == 14
+    assert int(a._len[s]) == 14 and a.pages_used(s) == 4
     with pytest.raises(ValueError):
-        a.rollback(s, 15)                # growth must go through extend
+        a.rollback(s, 15)                # growth must go through ensure
     with pytest.raises(ValueError):
         a.rollback(s, 0)                 # zero-length slot is `free`'s job
+
+
+def test_page_allocator_block_table_exact_and_disjoint():
+    """Block-table rows mirror the mapping exactly: mapped prefixes are
+    real page ids, the tail is -1, live rows are pairwise disjoint, and
+    rollback/free return pages that a new slot can remap."""
+    from repro.serving import SlotAllocator
+    a = SlotAllocator(num_slots=3, max_seq=32, page_size=8, num_pages=6)
+    s0 = a.alloc(17)                     # 3 pages
+    s1 = a.alloc(8)                      # 1 page
+    bt = a.block_table
+    assert (bt[s0, :3] >= 0).all() and (bt[s0, 3:] == -1).all()
+    assert (bt[s1, :1] >= 0).all() and (bt[s1, 1:] == -1).all()
+    assert not set(bt[s0, :3]) & set(bt[s1, :1])
+    a.rollback(s0, 9)                    # 3 -> 2 pages, page-exact
+    assert (bt[s0, :2] >= 0).all() and (bt[s0, 2:] == -1).all()
+    assert a.pages_in_use == 3
+    s2 = a.alloc(24)                     # 3 pages from the returned pool
+    live = [set(bt[s][bt[s] >= 0]) for s in (s0, s1, s2)]
+    assert sum(len(x) for x in live) == len(set().union(*live))
+    a.free(s1)
+    assert (bt[s1] == -1).all()
+    assert a.pages_in_use == 5
+
+
+def test_page_allocator_typed_exhaustion():
+    """``SlotsExhausted`` when slots run out, ``PagePoolExhausted`` when
+    the pool does — slots can be free while pages are not, which is the
+    regime a shrunk ``num_pages`` creates on purpose."""
+    from repro.serving import (PagePoolExhausted, SlotAllocator,
+                               SlotsExhausted)
+    a = SlotAllocator(num_slots=4, max_seq=32, page_size=8, num_pages=4)
+    s0 = a.alloc(32)                     # whole pool in one slot
+    assert a.num_free == 3               # slots ARE free...
+    assert not a.can_admit(1)
+    with pytest.raises(PagePoolExhausted):
+        a.alloc(1)                       # ...but no pages
+    a.rollback(s0, 24)
+    s1 = a.alloc(3)
+    with pytest.raises(PagePoolExhausted):
+        a.ensure(s1, 9)                  # live slot cannot grow either
+    a.free(s0)
+    for n in (8, 8, 8):
+        a.alloc(n)
+    with pytest.raises(SlotsExhausted):
+        a.alloc(1)                       # now it IS the slot count
+    assert issubclass(SlotsExhausted, RuntimeError)
+    assert issubclass(PagePoolExhausted, RuntimeError)
+
+
+def test_page_allocator_group_partitioning():
+    """With dp groups, a slot only draws pages from its own group's
+    contiguous range (device-side pages shard over dp x tp, so a slot's
+    pages must live on its own dp group's shards)."""
+    from repro.serving import PagePoolExhausted, SlotAllocator
+    a = SlotAllocator(num_slots=4, max_seq=32, page_size=8, num_pages=8,
+                      num_groups=2)
+    assert a.pages_per_group == 4
+    s0 = a.alloc(32)                     # slot 0 -> group 0, pages 0..3
+    assert a.group_of(s0) == 0 and set(a.block_table[s0]) == {0, 1, 2, 3}
+    # group 0 is now empty, but group 1's slots/pages still admit
+    assert a.can_admit(32)
+    s2 = a.alloc(32)                     # slots 2,3 -> group 1, pages 4..7
+    assert a.group_of(s2) == 1 and set(a.block_table[s2]) == {4, 5, 6, 7}
+    with pytest.raises(PagePoolExhausted):
+        a.alloc(1)                       # slots 1 and 3 free, pools empty
+
+
+@pytest.mark.slow
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 40)),
+                min_size=1, max_size=60),
+       st.integers(1, 3))
+def test_fuzz_page_allocator_never_leaks_or_double_maps(ops, groups):
+    """Hypothesis fuzz of the page allocator: ANY alloc/ensure/rollback/
+    free sequence keeps (a) every page mapped at most once, (b) live
+    slots' block-table rows disjoint and exactly mirroring the mapping,
+    (c) free + mapped == num_pages, (d) failed ops state-neutral."""
+    from repro.serving import SlotAllocator
+    from repro.serving.errors import (CacheOverflowError,
+                                      PagePoolExhausted, SlotsExhausted)
+    a = SlotAllocator(num_slots=3 * groups, max_seq=32, page_size=8,
+                      num_pages=6 * groups, num_groups=groups)
+    live = {}                            # slot -> len
+
+    def check():
+        mapped = []
+        for s in range(a.num_slots):
+            row = a.block_table[s]
+            used = a.pages_used(s)
+            assert (row[:used] >= 0).all() and (row[used:] == -1).all()
+            if s in live:
+                assert used == -(-live[s] // a.page_size)
+                grp = a.group_of(s)
+                lo = grp * a.pages_per_group
+                assert all(lo <= p < lo + a.pages_per_group
+                           for p in row[:used])
+            else:
+                assert used == 0
+            mapped += list(row[:used])
+        assert len(mapped) == len(set(mapped)), "double-mapped page"
+        free_total = sum(a.free_pages_in_group(g) for g in range(groups))
+        assert free_total + len(mapped) == a.num_pages, "page leak"
+
+    for op, arg in ops:
+        try:
+            if op == 0:
+                s = a.alloc(min(arg, 32))
+                live[s] = min(arg, 32)
+            elif op == 1 and live:
+                s = sorted(live)[arg % len(live)]
+                a.ensure(s, live[s] + arg)
+                live[s] = max(live[s], live[s] + arg)
+            elif op == 2 and live:
+                s = sorted(live)[arg % len(live)]
+                new_len = max(1, live[s] - arg)
+                a.rollback(s, new_len)
+                live[s] = new_len
+            elif op == 3 and live:
+                s = sorted(live)[arg % len(live)]
+                a.free(s)
+                del live[s]
+        except (SlotsExhausted, PagePoolExhausted, CacheOverflowError):
+            pass                         # typed refusals must not mutate
+        check()
+    for s in sorted(live):
+        a.free(s)
+    assert a.pages_in_use == 0 and a.num_free == a.num_slots
+    assert (a.block_table == -1).all()
 
 
 # ---------------------------------------------------------------------------
@@ -185,6 +320,7 @@ def test_sampling_single_device_greedy_topk_topp():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("scfg_kw", [dict(), dict(top_k=8),
                                      dict(top_p=0.6)])
 def test_sampling_statistics_match_host_reference(scfg_kw):
@@ -251,10 +387,20 @@ def test_distributed_sampling_matches_host():
     run("serving_sampling")
 
 
+@pytest.mark.slow
 def test_distributed_sampling_statistics():
     """TV distance of the fused sampler vs the host reference at tp=8."""
     out = run("sampling_stats")
     assert out.count("sampling stats OK") == 3
+
+
+def test_paged_pool_shared_across_mixed_lengths():
+    """Block-table paging payoff: one long slot and several short ones
+    share a pool SMALLER than the dense reservation, on the 2x4 mesh
+    (pool pages sharded over dp x tp, slots batch-sharded over dp),
+    token-identical to the dense-equivalent full pool."""
+    out = run("serving_paged_mixed")
+    assert "paged mixed OK" in out
 
 
 def test_speculative_decoding_parity_and_acceptance():
