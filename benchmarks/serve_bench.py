@@ -21,8 +21,18 @@ the mean accepted draft length: the verify step multiplies the
 decode-boundary traffic by K+1, which is exactly the term the coded
 wire absorbs (vwireKB/tok already divides by the measured acceptance).
 
+With ``--async-depth 1`` the engine runs the dispatch/commit pipeline
+(step t+1 launched before step t's tokens are synced).  The run is
+driven step-by-step so every scheduler tick's host wall time is
+measured individually, and the report appends a per-step latency
+histogram — ``stepus p50/p95/p99`` — next to the mean: the overlap win
+is a distribution shift the mean alone would hide, so it is measured,
+not claimed.  Wire bytes per token are codec-determined and must not
+move with the depth.
+
     PYTHONPATH=src python benchmarks/serve_bench.py [--mesh 1x2]
     PYTHONPATH=src python benchmarks/serve_bench.py --spec-k 3
+    PYTHONPATH=src python benchmarks/serve_bench.py --async-depth 1
 """
 from __future__ import annotations
 
@@ -50,6 +60,9 @@ def main():
                          "default, num_slots * pages_per_slot)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative draft tokens per verify step")
+    ap.add_argument("--async-depth", type=int, default=0,
+                    help="decode steps the host dispatches ahead of the "
+                         "oldest un-synced step (0: synchronous loop)")
     ap.add_argument("--repetitive", action="store_true",
                     help="cyclic prompts (the drafter's best case)")
     args = ap.parse_args()
@@ -90,7 +103,8 @@ def main():
                             prefill_len=args.prompt_len,
                             page_size=args.page_size,
                             num_pages=args.num_pages,
-                            spec_k=args.spec_k)
+                            spec_k=args.spec_k,
+                            async_depth=args.async_depth)
         cell = ShapeCell("serve_decode", max_seq, args.slots, "decode")
         plan = SP.make_plan(cfg, cell, mesh)
         params = TR.init_sharded_params(cfg, plan, mesh,
@@ -101,11 +115,17 @@ def main():
         engine = ServingEngine(cfg, mesh, params, ecfg)
         engine.warmup(prompts[0])
 
-        t0 = time.perf_counter()
-        results = engine.run(reqs)
-        dt = time.perf_counter() - t0
+        # timestamp every scheduler tick so per-step host wall time is
+        # measured individually: the async pipeline's win is a per-step
+        # latency distribution shift, invisible to the mean
+        ts = [time.perf_counter()]
+        results = engine.run(
+            reqs, on_step=lambda _: ts.append(time.perf_counter()))
+        dt = ts[-1] - ts[0]
         toks = engine.tokens_generated
         assert len(results) == args.requests
+        p50, p95, p99 = np.percentile(np.diff(np.asarray(ts)) * 1e6,
+                                      [50, 95, 99])
         if baseline_tokens is None:
             baseline_tokens = toks
         assert toks == baseline_tokens, (
@@ -124,6 +144,8 @@ def main():
         print(f"serve/{codec},{us_per_tok:.1f},"
               f"tok/s={toks/dt:.1f} wireKB/tok={per_tok/1e3:.2f} "
               f"steps={engine.decode_steps} slots={args.slots} "
+              f"depth={args.async_depth} "
+              f"stepus p50={p50:.0f} p95={p95:.0f} p99={p99:.0f} "
               f"pages={ps['peak_pages_in_use']}/{ps['num_pages']} "
               f"kvKBpeak={peak_kb/1e3:.1f} "
               f"kvKBdense={ps['kv_bytes_dense']/1e3:.1f}{extra}")

@@ -29,6 +29,16 @@ Recurrent-state families (ssm/rnn/hybrid) silently fall back to
 ``--repetitive`` makes the prompts cyclic so the drafter has something
 to find; the report then shows ``accepted len > 1`` and the verify-step
 wire bytes per committed token next to the vanilla decode wire.
+
+Async decode streams
+--------------------
+``--async-depth 1`` runs the engine as a dispatch/commit pipeline: the
+host launches decode step t+1 (feeding step t's sampled tokens straight
+from the device array, no host round-trip) before it syncs step t, so
+scheduling, admission prefill, and page bookkeeping overlap the device
+step.  Greedy token streams are bit-identical to ``--async-depth 0``;
+see ``benchmarks/serve_bench.py`` for the measured per-step latency
+histogram.
 """
 import argparse
 import time
@@ -70,6 +80,11 @@ def main():
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative draft tokens per verify step "
                          "(0: vanilla decode)")
+    ap.add_argument("--async-depth", type=int, default=0,
+                    help="decode steps the host dispatches ahead of the "
+                         "oldest un-synced step (1 overlaps host "
+                         "scheduling with the device step; greedy "
+                         "streams are token-identical to 0)")
     ap.add_argument("--repetitive", action="store_true",
                     help="cyclic prompts (speculative decoding's best "
                          "case: the n-gram drafter matches)")
@@ -86,7 +101,8 @@ def main():
                         page_size=args.page_size,
                         num_pages=args.num_pages,
                         top_k=args.top_k, top_p=args.top_p,
-                        spec_k=args.spec_k)
+                        spec_k=args.spec_k,
+                        async_depth=args.async_depth)
 
     cell = ShapeCell("serve_decode", ecfg.max_seq, ecfg.num_slots, "decode")
     plan = SP.make_plan(cfg, cell, mesh)
@@ -121,6 +137,7 @@ def main():
           f"{toks} tokens in {dt*1e3:.0f}ms "
           f"({toks/max(dt, 1e-9):.1f} tok/s on CPU)")
     print(f"decode steps={engine.decode_steps}  "
+          f"async depth={engine.async_depth}  "
           f"wire {per_tok/1e3:.1f}KB/token "
           f"({dict(stats.counts)} collectives/step)")
     print(f"kv pool: peak {ps['peak_pages_in_use']}/{ps['num_pages']} "

@@ -280,6 +280,28 @@ def serve_decode_input_specs(plan: CellPlan, page_size: int,
     return inputs, specs
 
 
+def serve_feed_specs(plan: CellPlan, page_size: int, spec_k: int = 0):
+    """PartitionSpecs for the engine's per-dispatch feed staging.
+
+    The async engine (``EngineConfig.async_depth > 0``) double-buffers
+    its scheduler-facing inputs: each dispatch stages a FRESH device
+    copy of the host token/pos/temp arrays and block table (via
+    ``jax.device_put`` with these specs), while the in-flight step keeps
+    sole ownership of the previous copies — host-side scheduling can
+    then mutate its arrays for step t+1 without racing step t's
+    transfer.  Staging with the step's own input sharding also means no
+    reshard sits between the feed and the compiled shard_map program.
+    ``vtoken`` (present when ``spec_k > 0``) is the [B, spec_k+1]
+    speculative token block of a verify step.
+    """
+    bs = _bspec(plan)
+    _, bt_sp = block_table_specs(plan, page_size)
+    specs = {"token": P(bs), "pos": P(bs), "temp": P(bs), "bt": bt_sp}
+    if spec_k > 0:
+        specs["vtoken"] = P(bs, None)
+    return specs
+
+
 def verify_shape_cell(max_seq: int, num_slots: int, spec_k: int) -> ShapeCell:
     """Shape cell for the speculative k-token verify program.
 

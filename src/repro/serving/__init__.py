@@ -1,6 +1,34 @@
 """Batched serving: continuous batching, block-table paged KV (shared
-device page pool), on-device sampling, and self-drafting speculative
-decoding over the spike-coded wire."""
+device page pool), on-device sampling, self-drafting speculative
+decoding, and async dispatch/commit decode streams over the
+spike-coded wire.
+
+``EngineConfig`` knobs (the four that shape the serving regime):
+
+===============  ========================================================
+``async_depth``  Decode steps the host may dispatch ahead of the oldest
+                 un-synced step.  0 (default): classic synchronous loop.
+                 1: step t+1 launches before step t's tokens are fetched
+                 — host scheduling overlaps device compute; greedy
+                 streams are token-identical to 0 (fuzz-enforced).
+                 With ``spec_k > 0`` drafting joins the pipeline, so
+                 only admission prefill overlaps the in-flight verify.
+``spec_k``       Draft tokens per speculative verify step (0: vanilla
+                 decode).  One batched forward scores all spec_k+1
+                 positions per slot through the same coded boundaries;
+                 greedy acceptance is token-identical to ``spec_k=0``.
+                 Recurrent-state families force 0 (no rollback).
+``num_pages``    KV page-pool size, independent of ``num_slots *
+                 max_seq``.  0: dense-equivalent default (can never
+                 exhaust before the slots do); smaller is the paging
+                 payoff — slots share the pool, exhaustion is the typed
+                 ``PagePoolExhausted``.
+``page_size``    Positions per KV page.  Admission maps only
+                 ``ceil(prompt_len / page_size)`` pages; decode maps one
+                 more page per ``page_size`` generated tokens
+                 (alloc-on-extend).
+===============  ========================================================
+"""
 from .draft import NGramDrafter
 from .engine import (WARMUP_RID, EngineConfig, Request, ServingEngine,
                      make_engine_decode_step, make_engine_prefill_step,

@@ -30,7 +30,38 @@ Scheduling is classic continuous batching: every ``step()`` first admits
 queued requests into free slots (prefill-then-decode interleaving), then
 runs a single batched decode step; finished requests (max tokens, EOS,
 or context full) retire immediately and their slot AND its KV pages
-return to the free pool for the next admit.  Admission maps only
+return to the free pool for the next admit.
+
+Async decode streams (``EngineConfig.async_depth``): the engine is a
+dispatch/commit pipeline.  ``dispatch()`` admits what fits and LAUNCHES
+one batched device step without waiting for its tokens; ``commit()``
+joins the oldest in-flight step (the only host sync on the hot path)
+and applies its bookkeeping.  ``async_depth=0`` (default) commits every
+dispatch immediately — the classic synchronous loop.  ``async_depth=1``
+dispatches step t+1 before fetching step t's tokens: the token feed for
+t+1 is step t's sampled-token DEVICE array chained straight back in
+(XLA pipelines the two steps; the host never round-trips the values),
+positions advance deterministically by one, and each dispatch stages
+fresh double-buffered token/pos/block-table device arrays so host-side
+scheduling for t+1 never races step t's transfers.  Retirement the host
+can predict (token count, context end) is applied at dispatch so dead
+slots stop being scheduled instantly; EOS is only discoverable at
+commit, one step late under overlap — the already-dispatched zombie
+step's token for that slot is discarded (slot identity, not index, ties
+outputs to requests) and the pages it touched return through the
+cache's deferred-free epoch, never to a concurrently-dispatched
+snapshot.  Prefill admits are issued eagerly between decode dispatches
+(the prefill overlaps the in-flight step; the new slot joins the batch
+at the next dispatch).  Under greedy sampling the async schedule is
+token-identical to the sync loop — per-slot streams are batch-
+independent and the chained device tokens are the very same values the
+host would have fed back — asserted by ``tests/test_engine_fuzz.py``
+and the ``serving_parity``/``serving_spec_parity`` scenarios.  With
+``spec_k > 0`` the host must see step t's accepted tokens before it can
+draft step t+1, so a verify dispatch first joins the pipeline; what
+still overlaps is admission prefill against the in-flight verify step.
+
+Admission maps only
 ``ceil(prompt_len / page_size)`` pages; each decode/verify step first
 ``ensure``s pages covering the positions it will write (alloc-on-
 extend), raising typed ``PagePoolExhausted`` when the pool — not the
@@ -68,15 +99,15 @@ from collections import deque
 from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ShapeCell
 from ..launch.serve import strip_dp_specs
 from ..launch.specs import (cache_specs, default_num_pages, make_context,
                             make_plan, serve_decode_input_specs,
-                            serve_verify_input_specs, verify_shape_cell)
+                            serve_feed_specs, serve_verify_input_specs,
+                            verify_shape_cell)
 from ..launch.train import shard_params_specs
 from ..models import model as M
 from . import sampling
@@ -123,6 +154,9 @@ class EngineConfig:
     replicate_weights: bool = False
     seed: int = 0
     spec_k: int = 0                # draft tokens per verify step (0: off)
+    async_depth: int = 0           # decode steps the host may dispatch
+    #                                ahead of the oldest un-synced step
+    #                                (0: classic synchronous loop)
 
 
 @dataclasses.dataclass
@@ -130,6 +164,25 @@ class _Slot:
     req: Request
     out: list
     drafter: Optional[NGramDrafter] = None
+    #: uncommitted dispatched steps this slot participates in
+    inflight: int = 0
+    #: scheduled for future dispatches; False once the host knows (or
+    #: can predict) the request is finished
+    live: bool = True
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched, not-yet-committed batched device step."""
+
+    kind: str                          # "decode" | "verify"
+    #: (slot index, _Slot) pairs live at dispatch time — the OBJECT, not
+    #: the index, ties the step's outputs to requests, so a slot retired
+    #: (or even re-admitted) between dispatch and commit simply drops
+    #: its column instead of corrupting the new occupant
+    entries: list
+    out: object                        # device token future [n] or [n,K1]
+    drafts: Optional[np.ndarray] = None   # [n, spec_k] (verify only)
 
 
 def make_engine_prefill_step(cfg, plan, mesh, scfg: SamplingConfig,
@@ -249,6 +302,9 @@ class ServingEngine:
                 f"tp_size={self.plan.tp_size}")
         if ecfg.spec_k < 0:
             raise EngineConfigError(f"spec_k={ecfg.spec_k} must be >= 0")
+        if ecfg.async_depth < 0:
+            raise EngineConfigError(
+                f"async_depth={ecfg.async_depth} must be >= 0")
         if ecfg.page_size < 1:
             raise EngineConfigError(f"page_size={ecfg.page_size} must be "
                                     ">= 1")
@@ -295,6 +351,20 @@ class ServingEngine:
         self._queue: deque[Request] = deque()
         self._retired: list = []       # finished (request, tokens) pairs
         #                                awaiting pickup by step()
+        # -- dispatch/commit pipeline state --
+        self.async_depth = ecfg.async_depth
+        self._inflight: deque[_InFlight] = deque()
+        self._feed_specs = serve_feed_specs(self.plan, ecfg.page_size,
+                                            self.spec_k)
+        #: last decode dispatch's sampled-token DEVICE array: the token
+        #: feed of the next dispatch chains it back in without a host
+        #: round-trip (None until the first decode dispatch)
+        self._tok_dev = None
+        #: slots whose next feed token must come from the host shadow
+        #: (``self._tokens``) instead of the chained device array —
+        #: freshly admitted slots, whose first token the device output
+        #: never carried
+        self._tok_dirty: set[int] = set()
         self._key = jax.random.PRNGKey(ecfg.seed)
         self._tick = 0
         self.tokens_generated = 0
@@ -331,6 +401,16 @@ class ServingEngine:
         return jax.random.fold_in(self._key, self._tick)
 
     def _admit(self, req: Request):
+        """Prefill ``req`` into a free slot.
+
+        The prefill/insert launches are asynchronous, so under
+        ``async_depth > 0`` they overlap whatever decode/verify step is
+        currently in flight (XLA orders them behind it on the donated
+        cache buffers); only the single first-token scalar is synced
+        here, for EOS/limit bookkeeping.  The new slot joins the batched
+        feed at the NEXT dispatch (its token is marked host-dirty and
+        patched over the chained device tokens).
+        """
         P_len = len(req.prompt)
         toks = np.zeros((1, self.prefill_len), np.int32)
         toks[0, :P_len] = np.asarray(req.prompt, np.int32)
@@ -348,19 +428,34 @@ class ServingEngine:
         self._tokens[slot] = first
         self._pos[slot] = P_len
         self._temp[slot] = req.temperature
+        self._tok_dirty.add(slot)
         self.tokens_generated += 1
         self._maybe_retire(slot, first)
+
+    def _committed_pos(self, st: _Slot) -> int:
+        """The slot's committed cache occupancy / next write position.
+
+        Derived, not stored: admit leaves ``prompt + [first]`` at
+        occupancy ``len(prompt)``, and every committed token advances
+        both ``out`` and the position by one — so the dispatch-side
+        ``self._pos`` (which runs ahead of the host under overlap) can
+        never be confused with what has actually been committed.
+        """
+        return len(st.req.prompt) + len(st.out) - 1
 
     def _maybe_retire(self, slot: int, tok: int):
         st = self._slots[slot]
         done = (len(st.out) >= st.req.max_new_tokens
                 or (self.ecfg.eos_id is not None and tok == self.ecfg.eos_id)
-                or self._pos[slot] >= self.ecfg.max_seq)
+                or self._committed_pos(st) >= self.ecfg.max_seq)
         if done:
             # evict zeroes the slot's block-table row (-1), so the stale
             # pos/token the retired row still carries into the next
             # batched step can only produce dropped writes — a recycled
-            # page can never be corrupted by its previous owner
+            # page can never be corrupted by its previous owner.  Under
+            # overlap the freed pages park in the cache's deferred-free
+            # limbo until every dispatched snapshot has committed.
+            st.live = False
             self.cache.evict(slot)
             self._slots[slot] = None
             self._retired.append((st.req, st.out))
@@ -373,48 +468,86 @@ class ServingEngine:
 
     @property
     def idle(self) -> bool:
-        return not self._queue and self.num_active == 0
+        return (not self._queue and self.num_active == 0
+                and not self._inflight)
+
+    def _live_slots(self) -> list:
+        return [i for i, s in enumerate(self._slots)
+                if s is not None and s.live]
 
     def step(self) -> list:
-        """Admit what fits, then one batched decode (or k-token verify)
-        step.  Returns the requests finished this step as
-        (request, tokens) pairs.
+        """One scheduler tick: dispatch what can run, commit what must.
+
+        Returns the requests finished this tick as (request, tokens)
+        pairs.  With ``async_depth=0`` every dispatch commits
+        immediately — the classic synchronous loop.  With
+        ``async_depth=d > 0`` the host keeps up to ``d`` device steps in
+        flight: a tick dispatches step t+1 and only then joins step
+        t+1-d, so host scheduling (admission, retirement, page
+        bookkeeping) runs while the device computes.  When nothing can
+        be dispatched (no live slot) the pipeline drains fully so the
+        engine always reaches ``idle``.
 
         Admission is gated on BOTH a free slot and free pool pages for
         the prompt (``can_admit``); a request that doesn't fit stays
-        queued.  Before the device step, every active slot maps pages
-        covering the positions the step will write (alloc-on-extend) —
-        if a live slot cannot grow because its pool group is empty,
-        ``PagePoolExhausted`` propagates: the pool, not the slot count,
-        is the binding limit, and the operator sized ``num_pages`` below
-        the workload's concurrent-context demand.
+        queued.  Before a device step launches, every scheduled slot
+        maps pages covering the positions the step will write
+        (alloc-on-extend) — if a live slot cannot grow because its pool
+        group is empty, ``PagePoolExhausted`` propagates: the pool, not
+        the slot count, is the binding limit, and the operator sized
+        ``num_pages`` below the workload's concurrent-context demand.
         """
+        dispatched = self.dispatch()
+        target = self.async_depth if dispatched else 0
+        while len(self._inflight) > target:
+            self.commit()
+        return self._drain_retired()
+
+    def dispatch(self) -> bool:
+        """Admit what fits, then LAUNCH one batched decode (or k-token
+        verify) step without waiting for its tokens.  Returns True iff a
+        device step was dispatched (its results surface at a later
+        ``commit()``)."""
         while self._queue and self.cache.allocator.can_admit(
                 len(self._queue[0].prompt)):
             self._admit(self._queue.popleft())
-        active = [i for i, s in enumerate(self._slots) if s is not None]
-        if not active:
-            return self._drain_retired()
         if self.spec_k > 0:
-            self._spec_step(active)
-            return self._drain_retired()
-        for i in active:
-            # the step writes KV at position pos: map its page first
-            self.cache.ensure(i, int(self._pos[i]) + 1)
-        nxt, self.cache.buffers = self._decode(
-            self.params, self.cache.buffers, self._tokens, self._pos,
-            jnp.asarray(self.cache.block_table), self._temp,
-            self._next_key())
-        nxt = np.asarray(nxt)
+            # drafting reads committed tokens: join the pipeline first
+            # (the admissions above already overlapped the in-flight
+            # verify step — that is the spec path's share of the win)
+            self.flush()
+            live = self._live_slots()
+            if not live:
+                return False
+            self._dispatch_verify(live)
+            return True
+        live = self._live_slots()
+        if not live:
+            return False
+        self._dispatch_decode(live)
+        return True
+
+    def commit(self):
+        """Join the OLDEST in-flight step — the single host sync of the
+        decode hot path — and apply its bookkeeping: append/accept
+        tokens, retire finished requests, roll back rejected drafts,
+        release deferred page frees."""
+        if not self._inflight:
+            raise ValueError("commit: no dispatched step in flight")
+        rec = self._inflight.popleft()
+        out = np.asarray(rec.out)        # host sync: the step has fully
+        #                                  executed once this returns
+        self.cache.note_commit()
         self.decode_steps += 1
-        for i in active:
-            tok = int(nxt[i])
-            self._slots[i].out.append(tok)
-            self._tokens[i] = tok
-            self._pos[i] += 1
-            self.tokens_generated += 1
-            self._maybe_retire(i, tok)
-        return self._drain_retired()
+        if rec.kind == "verify":
+            self._commit_verify(rec, out)
+        else:
+            self._commit_decode(rec, out)
+
+    def flush(self):
+        """Commit every in-flight dispatched step (drain the pipeline)."""
+        while self._inflight:
+            self.commit()
 
     def _drain_retired(self) -> list:
         """Hand the retirements accumulated so far to the caller.
@@ -428,10 +561,70 @@ class ServingEngine:
         out, self._retired = self._retired, []
         return out
 
-    def _spec_step(self, active):
-        """One speculative step: draft k per slot, verify all k+1
-        positions in one batched forward, commit the longest accepted
-        prefix plus the model's correction token, roll back the rest.
+    # -- dispatch side -----------------------------------------------------
+
+    def _stage(self, arr, spec):
+        """Fresh device copy of a host feed array with the step's own
+        input sharding (the double buffer: the in-flight step keeps the
+        previous copy, the host is free to mutate ``arr`` for the next
+        tick)."""
+        return jax.device_put(np.ascontiguousarray(arr),
+                              NamedSharding(self.mesh, spec))
+
+    def _token_feed(self):
+        """Device token feed for the next decode dispatch.
+
+        Chains the previous dispatch's sampled-token device array
+        straight back in — the values never visit the host — and
+        patches freshly admitted slots from the host shadow copy.
+        Slots retired between the two dispatches keep whatever the
+        device array carries: their block-table rows are already -1 (or
+        owned by a new occupant that is itself patched here), so the
+        garbage can only produce dropped writes and discarded outputs.
+        """
+        if self._tok_dev is None:
+            self._tok_dirty.clear()
+            return self._stage(self._tokens, self._feed_specs["token"])
+        feed = self._tok_dev
+        if self._tok_dirty:
+            idx = np.asarray(sorted(self._tok_dirty), np.int32)
+            feed = feed.at[idx].set(self._tokens[idx])
+            self._tok_dirty.clear()
+        return feed
+
+    def _dispatch_decode(self, live):
+        for i in live:
+            # the step writes KV at position pos: map its page first.
+            # Under overlap a slot here may already be finished at a
+            # still-uncommitted step (late EOS) — its page comes back
+            # through the deferred-free epoch at that step's commit.
+            self.cache.ensure(i, int(self._pos[i]) + 1)
+        tok = self._token_feed()
+        pos = self._stage(self._pos, self._feed_specs["pos"])
+        bt = self._stage(self.cache.block_table, self._feed_specs["bt"])
+        temp = self._stage(self._temp, self._feed_specs["temp"])
+        out, self.cache.buffers = self._decode(
+            self.params, self.cache.buffers, tok, pos, bt, temp,
+            self._next_key())
+        self.cache.note_dispatch()
+        self._tok_dev = out
+        self._inflight.append(
+            _InFlight("decode", [(i, self._slots[i]) for i in live], out))
+        for i in live:
+            st = self._slots[i]
+            st.inflight += 1
+            self._pos[i] += 1
+            # predictable retirement (token count, context end) applies
+            # at dispatch so a finished slot never gets scheduled again;
+            # EOS is only discoverable at commit, one step late under
+            # overlap, and that zombie step's column is discarded
+            if (len(st.out) + st.inflight >= st.req.max_new_tokens
+                    or int(self._pos[i]) >= self.ecfg.max_seq):
+                st.live = False
+
+    def _dispatch_verify(self, live):
+        """Launch one speculative step: draft k per slot, score all k+1
+        positions in one batched forward.  Acceptance happens at commit.
 
         Under greedy sampling the committed stream is token-identical to
         ``spec_k=0``: drafts only ever get accepted when they equal the
@@ -441,22 +634,56 @@ class ServingEngine:
         k = self.spec_k
         n = self.ecfg.num_slots
         drafts = np.zeros((n, k), np.int32)
-        for i in active:
+        for i in live:
             drafts[i] = self._slots[i].drafter.propose(k)
             # the verify step writes KV at pos..pos+k (clipped at the
             # context end): map those pages before launching; the
             # rejected tail's pages roll back once acceptance is known
             self.cache.ensure(i, min(int(self._pos[i]) + k + 1,
                                      self.ecfg.max_seq))
-        tok_in = np.concatenate([self._tokens[:, None], drafts], axis=1)
+        tok_in = self._stage(
+            np.concatenate([self._tokens[:, None], drafts], axis=1),
+            self._feed_specs["vtoken"])
+        # this feed just consumed the host token shadow for EVERY slot:
+        # nothing stays dirty for a future feed
+        self._tok_dirty.clear()
+        pos = self._stage(self._pos, self._feed_specs["pos"])
+        bt = self._stage(self.cache.block_table, self._feed_specs["bt"])
+        temp = self._stage(self._temp, self._feed_specs["temp"])
         out, self.cache.buffers = self._verify(
-            self.params, self.cache.buffers, tok_in, self._pos,
-            jnp.asarray(self.cache.block_table), self._temp,
+            self.params, self.cache.buffers, tok_in, pos, bt, temp,
             self._next_key())
-        out = np.asarray(out)                                  # [n, k+1]
-        self.decode_steps += 1
-        for i in active:
-            st = self._slots[i]
+        self.cache.note_dispatch()
+        self._inflight.append(
+            _InFlight("verify", [(i, self._slots[i]) for i in live], out,
+                      drafts=drafts))
+        for i in live:
+            self._slots[i].inflight += 1
+
+    # -- commit side -------------------------------------------------------
+
+    def _commit_decode(self, rec: _InFlight, out: np.ndarray):
+        for i, st in rec.entries:
+            if self._slots[i] is not st:
+                continue     # retired at an earlier commit (late EOS) or
+                #              slot re-admitted: discard the zombie column
+            st.inflight -= 1
+            tok = int(out[i])
+            st.out.append(tok)
+            self._tokens[i] = tok
+            self.tokens_generated += 1
+            self._maybe_retire(i, tok)
+
+    def _commit_verify(self, rec: _InFlight, out: np.ndarray):
+        """Accept the longest draft prefix matching the verify output
+        plus the model's correction token; roll the rejected tail's
+        cache occupancy back page-exactly."""
+        k = self.spec_k
+        drafts = rec.drafts
+        for i, st in rec.entries:
+            if self._slots[i] is not st:
+                continue
+            st.inflight -= 1
             a = 0
             while a < k and drafts[i, a] == out[i, a]:
                 a += 1
@@ -479,26 +706,37 @@ class ServingEngine:
             self.spec_verifies += 1
             self._maybe_retire(i, int(self._tokens[i]))
 
+
     @property
     def mean_accepted_len(self) -> float:
         """Mean tokens committed per (slot, verify-step) — >1.0 means the
         drafter is paying for itself."""
         return self.spec_commits / max(self.spec_verifies, 1)
 
-    def run(self, requests: Sequence[Request], max_steps: int = 100000):
-        """Serve ``requests`` to completion; {rid: generated tokens}."""
+    def run(self, requests: Sequence[Request], max_steps: int = 100000,
+            on_step=None):
+        """Serve ``requests`` to completion; {rid: generated tokens}.
+
+        ``on_step`` (optional) is called as ``on_step(self)`` after
+        every scheduler tick — benches timestamp per-step latency
+        through it instead of re-implementing this drive loop (and
+        losing its typed ``SchedulerStall`` diagnostics).
+        """
         for r in requests:
             self.submit(r)
         results = {}
         for _ in range(max_steps):
             for req, out in self.step():
                 results[req.rid] = out
+            if on_step is not None:
+                on_step(self)
             if self.idle:
                 break
         if not self.idle:
             raise SchedulerStall(
-                f"run: {self.num_active} slots still active and "
-                f"{len(self._queue)} requests queued after "
+                f"run: {self.num_active} slots still active, "
+                f"{len(self._queue)} requests queued and "
+                f"{len(self._inflight)} steps in flight after "
                 f"{max_steps} steps")
         return results
 
@@ -511,10 +749,22 @@ class ServingEngine:
         self.reset_stats()
 
     def reset_stats(self):
+        """Zero the throughput counters.
+
+        Any in-flight dispatched step is committed FIRST: a pipelined
+        step straddling the reset would otherwise surface its tokens
+        (and its device time) inside the measured run — warmup would
+        leak work into the numbers it exists to keep clean.  Results
+        retired by the flush stay buffered for the next ``step()``.
+        """
+        self.flush()
         self.tokens_generated = 0
         self.decode_steps = 0
         self.spec_commits = 0
         self.spec_verifies = 0
+        # the pool high-water mark is a stat too: warmup's throwaway
+        # admission must not overstate the measured run's peak
+        self.cache.peak_pages_in_use = self.cache.allocator.pages_in_use
 
     # -- introspection -----------------------------------------------------
 
@@ -574,6 +824,7 @@ class ServingEngine:
             "page_size": alloc.page_size,
             "num_pages": alloc.num_pages,
             "pages_in_use": alloc.pages_in_use,
+            "pages_in_limbo": alloc.pages_in_limbo,
             "peak_pages_in_use": self.cache.peak_pages_in_use,
             "kv_bytes_mapped": self.cache.kv_bytes_mapped(),
             "kv_bytes_pool": self.cache.kv_bytes_pool(),

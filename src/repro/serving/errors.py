@@ -20,6 +20,17 @@ Hierarchy:
 admission means the same, but raised from a mid-flight ``ensure`` it
 means the operator sized ``num_pages`` below the workload's concurrent
 context demand — the pool, not the slot count, is the binding limit.
+
+Async serving (``EngineConfig.async_depth > 0``) shifts WHEN, not
+WHETHER, these fire: pages freed by a retirement or rollback park in
+the allocator's deferred-free limbo until every dispatched block-table
+snapshot has committed, so under overlap an ``ensure``/admission can
+hit ``PagePoolExhausted`` one step earlier than the synchronous
+schedule would (the pages are coming back, just not yet safe), and an
+``ensure`` may even be charged to a slot whose EOS the host has not
+discovered yet.  On a pool sized for the workload neither occurs; on a
+deliberately undersized pool the failure is the same typed error, at
+most one pipelined step sooner.
 """
 from __future__ import annotations
 

@@ -22,6 +22,20 @@ alloc-on-extend (``ensure``), and page-exact ``rollback``/``free`` that
 return the tail's pages to the pool.  Exhaustion is typed:
 ``SlotsExhausted`` vs ``PagePoolExhausted`` (see ``serving.errors``).
 
+Deferred-free epochs (async serving): when the engine pipelines decode
+steps (``EngineConfig.async_depth > 0``) it dispatches step t+1 before
+it has synced step t's tokens, so a block-table snapshot for an
+in-flight step may still name pages the host has since decided to free
+(late EOS retirement, speculative rollback).  ``note_dispatch()`` /
+``note_commit()`` bracket every device step; while any dispatched step
+is uncommitted, freed pages park on a limbo list tagged with the
+newest dispatch epoch and only rejoin the free pool once every step
+whose snapshot could name them has committed.  A limbo page can never
+be remapped to a new slot, so an in-flight step's reads and writes
+always land in pages still owned by the slot its snapshot mapped them
+to.  With no step in flight (the synchronous engine), frees are
+immediate and behavior is byte-identical to the pre-async allocator.
+
 ``insert`` splices a freshly prefilled single-request cache into the
 pool: state leaves are a slot-row write; KV leaves all_gather the one
 request's seq-sharded prefill KV over tp (the natural admit cost) and
@@ -93,6 +107,12 @@ class SlotAllocator:
             for g in range(num_groups)]
         self._len = np.zeros(num_slots, np.int64)   # current seq occupancy
         self._pages: list[list[int]] = [[] for _ in range(num_slots)]
+        # deferred-free epoch state: device steps launched vs joined, and
+        # pages freed while a snapshot may still name them —
+        # (release_epoch, page) pairs, nondecreasing in epoch
+        self._dispatched = 0
+        self._committed = 0
+        self._limbo: deque[tuple[int, int]] = deque()
         #: [num_slots, pages_per_slot] int32 global page ids, -1 unmapped —
         #: passed verbatim as the device block table every step
         self.block_table = np.full((num_slots, self.pages_per_slot), -1,
@@ -124,6 +144,45 @@ class SlotAllocator:
     def pages_in_use(self) -> int:
         return sum(len(p) for p in self._pages)
 
+    @property
+    def pages_in_limbo(self) -> int:
+        """Pages freed but not yet safe to remap (an uncommitted device
+        step's block-table snapshot may still name them)."""
+        return len(self._limbo)
+
+    # -- deferred-free epochs (async dispatch/commit) ----------------------
+
+    def note_dispatch(self):
+        """A device step was launched against the CURRENT block table.
+
+        Until the matching ``note_commit``, any page freed (evict,
+        rollback) parks on the limbo list instead of the free pool: the
+        in-flight step's snapshot may still read or write it, and
+        handing it to a new slot would let two owners race on one page.
+        """
+        self._dispatched += 1
+
+    def note_commit(self):
+        """The OLDEST in-flight device step joined the host (its output
+        was synced, so its reads/writes have fully executed).  Limbo
+        pages whose every possible holder has now committed rejoin their
+        group's free pool."""
+        if self._committed >= self._dispatched:
+            raise ValueError("note_commit without a matching "
+                             "note_dispatch: no device step is in flight")
+        self._committed += 1
+        while self._limbo and self._limbo[0][0] <= self._committed:
+            _, page = self._limbo.popleft()
+            self._free_pages[page // self.pages_per_group].append(page)
+
+    def _release_page(self, page: int):
+        if self._dispatched > self._committed:
+            # unsafe until every step dispatched so far has committed:
+            # tag with the newest epoch that could hold a snapshot
+            self._limbo.append((self._dispatched, page))
+        else:
+            self._free_pages[page // self.pages_per_group].append(page)
+
     # -- page mapping (internal) ------------------------------------------
 
     def _map_pages(self, slot: int, n: int):
@@ -140,11 +199,10 @@ class SlotAllocator:
             self._pages[slot].append(page)
 
     def _unmap_tail(self, slot: int, keep: int):
-        free = self._free_pages[self.group_of(slot)]
         while len(self._pages[slot]) > keep:
             page = self._pages[slot].pop()
             self.block_table[slot, len(self._pages[slot])] = -1
-            free.append(page)
+            self._release_page(page)
 
     # -- slot lifecycle ----------------------------------------------------
 
@@ -378,6 +436,22 @@ class PagedKVCache:
         recycled page overwrites every position before exposing it.
         """
         self.allocator.rollback(slot, new_len)
+
+    # -- async dispatch/commit epochs --------------------------------------
+
+    def note_dispatch(self):
+        """A decode/verify step was launched against a snapshot of the
+        current block table; frees defer until it commits."""
+        self.allocator.note_dispatch()
+
+    def note_commit(self):
+        """The oldest in-flight step's output was synced: release limbo
+        pages no uncommitted snapshot can name anymore."""
+        self.allocator.note_commit()
+
+    @property
+    def pages_in_limbo(self) -> int:
+        return self.allocator.pages_in_limbo
 
     # -- memory accounting -------------------------------------------------
 

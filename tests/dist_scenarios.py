@@ -6,6 +6,7 @@ Exit code 0 = pass.  XLA device-count env must be set before jax import,
 which is why these run out-of-process (smoke tests elsewhere keep 1
 device per the dry-run contract).
 """
+import dataclasses
 import os
 import sys
 
@@ -310,6 +311,19 @@ def scenario_serving_parity():
             [Request(rid=0, prompt=prompts[0], max_new_tokens=N)])
         assert solo[0] == res[0], (codec, solo[0], res[0])
 
+        # (a') async pipeline (dispatch t+1 before syncing t, device-
+        # chained token feed, deferred retirement) == sync, bit-for-bit,
+        # and it drains page/limbo-clean on the real dp x tp mesh
+        asn = ServingEngine(cfg, mesh, params,
+                            dataclasses.replace(ecfg, async_depth=1))
+        res_a = asn.run([Request(rid=i, prompt=p, max_new_tokens=N)
+                         for i, p in enumerate(prompts)])
+        for i in range(6):
+            assert res_a[i] == res[i], (codec, i, res[i], res_a[i])
+        alloc = asn.cache.allocator
+        assert alloc.pages_in_use == 0 and alloc.pages_in_limbo == 0
+        assert (alloc.block_table == -1).all()
+
         # (b) engine decode == teacher-forced argmax over prompt+generated
         S = P_len + N
         planT = SP.make_plan(cfg, ShapeCell("tf", S, 8, "train"), mesh)
@@ -408,6 +422,16 @@ def scenario_serving_spec_parity():
             assert res_s[i] == res_v[i], (codec, i, res_v[i], res_s[i])
         alloc = spec.cache.allocator
         assert alloc.pages_in_use == 0 and alloc.num_free == 4
+        # async + speculative: drafting joins the pipeline (admits still
+        # overlap the in-flight verify) — token streams stay identical
+        spec_a = ServingEngine(cfg, mesh, params, EngineConfig(
+            num_slots=4, max_seq=48, prefill_len=16, page_size=8,
+            spec_k=3, async_depth=1))
+        res_sa = spec_a.run(reqs())
+        for i in range(6):
+            assert res_sa[i] == res_v[i], (codec, i, res_v[i], res_sa[i])
+        assert spec_a.cache.allocator.pages_in_limbo == 0
+        assert spec_a.cache.allocator.pages_in_use == 0
         mal = spec.mean_accepted_len
         assert mal > 1.0, (codec, mal)
         assert spec.decode_steps < vanilla.decode_steps, (

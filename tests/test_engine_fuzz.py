@@ -7,6 +7,14 @@ composition can never leak between slots), for both the vanilla engine
 and the speculative one, and the page allocator ends every run with all
 pages free (no slot/page leaks through admit/retire/accept/rollback).
 
+Async pipeline property (``async_depth=1``): the SAME schedules through
+the dispatch/commit pipeline — step t+1 dispatched before step t's
+tokens are synced, retirement/rollback/admission bookkeeping deferred
+one step, freed pages parked in the deferred-free limbo — are
+token-identical to the synchronous engine, for vanilla and speculative
+decoding and for the ``none`` and ``spike_fused`` codecs, and every run
+still drains slot- and page-clean (nothing leaks through the limbo).
+
 Runs under hypothesis when installed (``pip install -e .[dev]``); without
 it the ``@given`` property pytest-skips (tests/_hyp.py) and the fixed
 deterministic schedules below still exercise the same invariants.
@@ -27,12 +35,19 @@ VOCAB = 256
 EOS = 7
 
 _ENGINES = None
+_ASYNC_ENGINES = {}
+_MODELS = {}
 
 
-def _engines():
-    """(cfg, batched vanilla, batched spec_k=2, solo) — built lazily once."""
-    global _ENGINES
-    if _ENGINES is None:
+def _engine_kw():
+    return dict(num_slots=NUM_SLOTS, max_seq=MAX_SEQ,
+                prefill_len=PREFILL_LEN, page_size=8, eos_id=EOS)
+
+
+def _model(codec):
+    """(cfg, mesh, params) for one codec — ONE param init shared by
+    every engine fixture of that codec."""
+    if codec not in _MODELS:
         import jax
         import jax.numpy as jnp
         from repro.configs import get_config
@@ -40,30 +55,58 @@ def _engines():
         from repro.configs.reduced import reduced
         from repro.launch import specs as SP, train as TR
         from repro.launch.mesh import make_mesh
-        from repro.serving import EngineConfig, ServingEngine
 
         mesh = make_mesh((1, 1), ("data", "model"))
-        cfg = reduced(get_config("qwen1.5-0.5b", hnn_mode="ann")).replace(
-            dtype=jnp.float32, codec="none")
+        hnn = "ann" if codec == "none" else "hnn"
+        cfg = reduced(get_config("qwen1.5-0.5b", hnn_mode=hnn)).replace(
+            dtype=jnp.float32, codec=codec)
         cell = ShapeCell("serve_decode", MAX_SEQ, NUM_SLOTS, "decode")
         plan = SP.make_plan(cfg, cell, mesh)
         params = TR.init_sharded_params(cfg, plan, mesh,
                                         jax.random.PRNGKey(0))
-        kw = dict(num_slots=NUM_SLOTS, max_seq=MAX_SEQ,
-                  prefill_len=PREFILL_LEN, page_size=8, eos_id=EOS)
-        batched = ServingEngine(cfg, mesh, params, EngineConfig(**kw))
-        spec = ServingEngine(cfg, mesh, params,
-                             EngineConfig(**kw, spec_k=2))
-        solo = ServingEngine(cfg, mesh, params, EngineConfig(**kw))
-        _ENGINES = (cfg, batched, spec, solo)
+        _MODELS[codec] = (cfg, mesh, params)
+    return _MODELS[codec]
+
+
+def _build_engine(codec, **extra):
+    from repro.serving import EngineConfig, ServingEngine
+    cfg, mesh, params = _model(codec)
+    return ServingEngine(cfg, mesh, params,
+                         EngineConfig(**_engine_kw(), **extra))
+
+
+def _engines():
+    """(cfg, batched vanilla, batched spec_k=2, solo) — built lazily once."""
+    global _ENGINES
+    if _ENGINES is None:
+        _ENGINES = (_model("none")[0], _build_engine("none"),
+                    _build_engine("none", spec_k=2), _build_engine("none"))
     return _ENGINES
+
+
+def _async_engines(codec):
+    """(sync ref, async_depth=1 vanilla, async_depth=1 spec_k=2) — lazily
+    built once per codec and reused across schedules."""
+    if codec not in _ASYNC_ENGINES:
+        if codec == "none":
+            sync = _engines()[1]          # share the module's sync engine
+        else:
+            sync = _build_engine(codec)
+        _ASYNC_ENGINES[codec] = (
+            sync,
+            _build_engine(codec, async_depth=1),
+            _build_engine(codec, async_depth=1, spec_k=2))
+    return _ASYNC_ENGINES[codec]
 
 
 def _assert_drained(engine):
     alloc = engine.cache.allocator
     assert engine.idle
+    assert not engine._inflight, "uncommitted dispatched step"
+    assert alloc._dispatched == alloc._committed, "unbalanced epochs"
     assert alloc.num_free == NUM_SLOTS, "slot leak"
     assert alloc.pages_in_use == 0, "page leak"
+    assert alloc.pages_in_limbo == 0, "page stuck in deferred-free limbo"
     assert (alloc._len == 0).all(), "stale occupancy"
     assert (alloc.block_table == -1).all(), "stale block-table mapping"
 
@@ -96,6 +139,36 @@ def _check_schedule(schedule):
     _assert_drained(spec)
 
 
+def _check_async_schedule(schedule, codec):
+    """Async (``async_depth=1``) vs sync token parity on one schedule:
+    same requests through the synchronous engine, the pipelined vanilla
+    engine, and the pipelined speculative engine (``spec_k=2``) — every
+    rid's greedy stream must be identical, and all three must drain
+    slot-, page- and limbo-clean."""
+    from repro.serving import Request
+    sync, asn, asn_spec = _async_engines(codec)
+    rng = np.random.RandomState(4321)
+    reqs = [Request(rid=i, prompt=list(rng.randint(0, VOCAB, plen)),
+                    max_new_tokens=mnt)
+            for i, (plen, mnt) in enumerate(schedule)]
+
+    def clone(r):
+        return Request(rid=r.rid, prompt=r.prompt,
+                       max_new_tokens=r.max_new_tokens)
+
+    ref = sync.run([clone(r) for r in reqs])
+    res_a = asn.run([clone(r) for r in reqs])
+    res_s = asn_spec.run([clone(r) for r in reqs])
+    assert set(res_a) == set(ref) == set(res_s)
+    for r in reqs:
+        assert res_a[r.rid] == ref[r.rid], (
+            codec, r.rid, ref[r.rid], res_a[r.rid])
+        assert res_s[r.rid] == ref[r.rid], (
+            "spec", codec, r.rid, ref[r.rid], res_s[r.rid])
+    for e in (sync, asn, asn_spec):
+        _assert_drained(e)
+
+
 # ---------------------------------------------------------------------------
 # fixed deterministic schedules (always run, no hypothesis needed)
 # ---------------------------------------------------------------------------
@@ -113,6 +186,52 @@ def test_fixed_schedule_single_and_short():
     _check_schedule([(16, 12), (16, 12), (16, 12)])
 
 
+def test_fixed_schedule_async_parity_queue_pressure():
+    """Async pipeline (depth 1) vs sync on the queue-pressure schedule:
+    mid-flight admits, late-EOS zombie steps, deferred retirement — all
+    token-identical, slot/page/limbo-clean."""
+    _check_async_schedule([(16, 6), (3, 1), (16, 8), (1, 4), (9, 8),
+                           (16, 2), (5, 5)], "none")
+    _check_async_schedule([(1, 1)], "none")
+
+
+def test_async_warmup_and_reset_stats_flush_inflight():
+    """``warmup``/``reset_stats`` must drain the pipeline before zeroing
+    stats: a pipelined step's tokens can never leak into the measured
+    run, and a mid-flight reset loses no results."""
+    from repro.serving import Request
+    _, asn, _ = _async_engines("none")
+    asn.warmup([1, 2, 3, 4])
+    assert asn.tokens_generated == 0 and asn.decode_steps == 0
+    assert not asn._inflight
+    # the throwaway admission must not contaminate the measured pool
+    # high-water mark either
+    assert asn.cache.peak_pages_in_use == 0
+    # dispatch without committing, then reset: the in-flight step is
+    # committed (not dropped) and the request still completes exactly
+    asn.submit(Request(rid=0, prompt=[5, 6, 7], max_new_tokens=6))
+    assert asn.dispatch() is True and len(asn._inflight) == 1
+    asn.reset_stats()
+    assert not asn._inflight and asn.tokens_generated == 0
+    res = asn.run([])
+    assert len(res[0]) == 6 or res[0][-1] == EOS
+    _assert_drained(asn)
+
+
+def test_async_depth_validation_is_typed():
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.configs.reduced import reduced
+    from repro.launch.mesh import make_mesh
+    from repro.serving import EngineConfig, EngineConfigError, ServingEngine
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(get_config("qwen1.5-0.5b", hnn_mode="ann")).replace(
+        dtype=jnp.float32, codec="none")
+    with pytest.raises(EngineConfigError):
+        ServingEngine(cfg, mesh, {}, EngineConfig(num_slots=2, max_seq=32,
+                                                  async_depth=-1))
+
+
 # ---------------------------------------------------------------------------
 # hypothesis property (skips cleanly when hypothesis is not installed)
 # ---------------------------------------------------------------------------
@@ -125,6 +244,20 @@ def test_fixed_schedule_single_and_short():
                 min_size=1, max_size=2 * NUM_SLOTS + 1))
 def test_fuzz_schedules_match_solo_and_leak_free(schedule):
     _check_schedule(schedule)
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, PREFILL_LEN),
+                          st.integers(1, 8)),
+                min_size=1, max_size=2 * NUM_SLOTS + 1),
+       st.sampled_from(["none", "spike_fused"]))
+def test_fuzz_async_parity_and_no_leaks(schedule, codec):
+    """Randomized schedules through the async pipeline: ``async_depth=1``
+    (vanilla and ``spec_k=2``) must be token-identical to the sync
+    engine for the ``none`` AND ``spike_fused`` codecs, with no slot or
+    page leaked through deferred retirement / the free-page limbo."""
+    _check_async_schedule(schedule, codec)
 
 
 # ---------------------------------------------------------------------------

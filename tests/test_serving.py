@@ -171,6 +171,60 @@ def test_page_allocator_typed_exhaustion():
     assert issubclass(PagePoolExhausted, RuntimeError)
 
 
+def test_deferred_free_epoch_blocks_remap_until_commit():
+    """Async overlap invariant: pages freed while a dispatched step's
+    block-table snapshot may still name them park in limbo — they can
+    NOT be remapped to a new slot until that step commits, at which
+    point they rejoin the free pool exactly."""
+    from repro.serving import PagePoolExhausted, SlotAllocator
+    a = SlotAllocator(num_slots=3, max_seq=32, page_size=8, num_pages=4)
+    s0 = a.alloc(16)                     # 2 pages
+    old_pages = set(int(p) for p in a.block_table[s0][:2])
+    a.note_dispatch()                    # step t snapshots s0's table
+    a.free(s0)                           # retirement lands mid-flight
+    assert a.pages_in_limbo == 2 and a.pages_in_use == 0
+    # the freed pages are NOT available: only the 2 never-mapped pages
+    # can back a new slot, so a 3-page request must fail typed even
+    # though 4 - pages_in_use == 4
+    assert not a.can_admit(17)
+    with pytest.raises(PagePoolExhausted):
+        a.alloc(17)
+    s1 = a.alloc(16)                     # fits in the 2 untouched pages
+    assert not set(int(p) for p in a.block_table[s1][:2]) & old_pages
+    a.note_commit()                      # step t joined: limbo releases
+    assert a.pages_in_limbo == 0
+    s2 = a.alloc(16)                     # now the old pages remap
+    assert set(int(p) for p in a.block_table[s2][:2]) == old_pages
+    a.free(s1)
+    a.free(s2)
+    assert a.pages_in_use == 0 and a.pages_in_limbo == 0
+
+
+def test_deferred_free_rollback_page_exact_under_overlap():
+    """Speculative rollback while a step is in flight: the rejected
+    tail's pages go to limbo (never straight back to the pool), the
+    committed occupancy is exact, and with NO step in flight frees stay
+    immediate — the sync engine's accounting is untouched."""
+    from repro.serving import SlotAllocator
+    a = SlotAllocator(num_slots=2, max_seq=32, page_size=4, num_pages=8)
+    s = a.alloc(10)                      # 3 pages
+    a.note_dispatch()
+    a.ensure(s, 14)                      # verify window: 4 pages
+    assert a.pages_used(s) == 4
+    a.rollback(s, 11)                    # reject the tail mid-flight
+    assert int(a._len[s]) == 11 and a.pages_used(s) == 3
+    assert a.pages_in_limbo == 1
+    a.note_commit()
+    assert a.pages_in_limbo == 0
+    # sync mode: dispatched == committed, frees are immediate
+    a.ensure(s, 14)
+    a.rollback(s, 11)
+    assert a.pages_in_limbo == 0
+    assert a.free_pages_in_group(0) == 8 - 3
+    with pytest.raises(ValueError):      # commit without dispatch: typed
+        a.note_commit()
+
+
 def test_page_allocator_group_partitioning():
     """With dp groups, a slot only draws pages from its own group's
     contiguous range (device-side pages shard over dp x tp, so a slot's
@@ -191,14 +245,17 @@ def test_page_allocator_group_partitioning():
 
 @pytest.mark.slow
 @settings(max_examples=60, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 40)),
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 40)),
                 min_size=1, max_size=60),
        st.integers(1, 3))
 def test_fuzz_page_allocator_never_leaks_or_double_maps(ops, groups):
     """Hypothesis fuzz of the page allocator: ANY alloc/ensure/rollback/
-    free sequence keeps (a) every page mapped at most once, (b) live
+    free sequence — interleaved with note_dispatch/note_commit epoch
+    marks, so frees land in the deferred-free limbo whenever a step is
+    "in flight" — keeps (a) every page mapped at most once, (b) live
     slots' block-table rows disjoint and exactly mirroring the mapping,
-    (c) free + mapped == num_pages, (d) failed ops state-neutral."""
+    (c) free + mapped + limbo == num_pages, (d) failed ops
+    state-neutral, (e) limbo empty whenever no step is outstanding."""
     from repro.serving import SlotAllocator
     from repro.serving.errors import (CacheOverflowError,
                                       PagePoolExhausted, SlotsExhausted)
@@ -223,7 +280,10 @@ def test_fuzz_page_allocator_never_leaks_or_double_maps(ops, groups):
             mapped += list(row[:used])
         assert len(mapped) == len(set(mapped)), "double-mapped page"
         free_total = sum(a.free_pages_in_group(g) for g in range(groups))
-        assert free_total + len(mapped) == a.num_pages, "page leak"
+        assert free_total + len(mapped) + a.pages_in_limbo \
+            == a.num_pages, "page leak"
+        if a._dispatched == a._committed:
+            assert a.pages_in_limbo == 0, "limbo outlived its epochs"
 
     for op, arg in ops:
         try:
@@ -243,12 +303,19 @@ def test_fuzz_page_allocator_never_leaks_or_double_maps(ops, groups):
                 s = sorted(live)[arg % len(live)]
                 a.free(s)
                 del live[s]
+            elif op == 4 and a._dispatched - a._committed < 2:
+                a.note_dispatch()        # a step starts: frees now defer
+            elif op == 5 and a._dispatched > a._committed:
+                a.note_commit()          # oldest step joins: limbo drains
         except (SlotsExhausted, PagePoolExhausted, CacheOverflowError):
             pass                         # typed refusals must not mutate
         check()
+    while a._dispatched > a._committed:
+        a.note_commit()
     for s in sorted(live):
         a.free(s)
     assert a.pages_in_use == 0 and a.num_free == a.num_slots
+    assert a.pages_in_limbo == 0
     assert (a.block_table == -1).all()
 
 
