@@ -30,9 +30,20 @@ is a distribution shift the mean alone would hide, so it is measured,
 not claimed.  Wire bytes per token are codec-determined and must not
 move with the depth.
 
+With ``--out BENCH_serve.json`` the same run also emits the structured
+perf-trajectory artifact (schema ``bench_serve/v1``, see
+``repro.serving.slo``): per-codec tokens/s, stepus/TTFT/TPOT
+percentiles, wire KB/token and SLO attainment, recorded by an attached
+``SLOMonitor``.  ``--trace-out steps.jsonl`` additionally exports the
+per-step wire-bytes trace (one JSON line per scheduler tick) that
+``repro.sim.noc.emio_cost_from_trace`` prices on the paper's EMIO model
+— the serving-trace -> NoC co-simulation bridge.  With multiple codecs
+the codec name is inserted before the trace file extension.
+
     PYTHONPATH=src python benchmarks/serve_bench.py [--mesh 1x2]
     PYTHONPATH=src python benchmarks/serve_bench.py --spec-k 3
     PYTHONPATH=src python benchmarks/serve_bench.py --async-depth 1
+    PYTHONPATH=src python benchmarks/serve_bench.py --out BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -65,6 +76,11 @@ def main():
                          "oldest un-synced step (0: synchronous loop)")
     ap.add_argument("--repetitive", action="store_true",
                     help="cyclic prompts (the drafter's best case)")
+    ap.add_argument("--out", default="",
+                    help="write a bench_serve/v1 BENCH_serve.json here")
+    ap.add_argument("--trace-out", default="",
+                    help="write the per-step wire-bytes trace (JSONL) "
+                         "for repro.sim.noc.emio_cost_from_trace")
     args = ap.parse_args()
 
     dp, tp = (int(x) for x in args.mesh.split("x"))
@@ -80,7 +96,8 @@ def main():
     from repro.configs.reduced import reduced
     from repro.launch import specs as SP, train as TR
     from repro.launch.mesh import make_mesh
-    from repro.serving import EngineConfig, Request, ServingEngine
+    from repro.serving import (EngineConfig, Request, ServingEngine,
+                               SLOMonitor, make_bench_payload, write_bench)
 
     mesh = make_mesh((dp, tp), ("data", "model"))
     max_seq = args.prompt_len + args.gen
@@ -95,7 +112,9 @@ def main():
                    for _ in range(args.requests)]
 
     baseline_tokens = None
-    for codec in args.codecs.split(","):
+    bench_results = {}
+    codecs = args.codecs.split(",")
+    for codec in codecs:
         hnn = "ann" if codec == "none" else "hnn"
         cfg = reduced(get_config(args.arch, hnn_mode=hnn)).replace(
             codec=codec)
@@ -114,13 +133,30 @@ def main():
 
         engine = ServingEngine(cfg, mesh, params, ecfg)
         engine.warmup(prompts[0])
+        _, per_tok = engine.decode_wire_stats()
+        step_kind = "verify" if engine.spec_k > 0 else "decode"
+        if step_kind == "verify":
+            # per-STEP bytes: one verify step commits num_slots tokens
+            # at accepted_len=1 by the scaling inside verify_wire_stats
+            _, vpt = engine.verify_wire_stats(1.0)
+            step_bytes = vpt * args.slots
+        else:
+            step_bytes = per_tok * args.slots
+        # attach AFTER warmup so the throwaway request's ticks never
+        # contaminate the step trace or the SLO percentiles
+        monitor = SLOMonitor(wire_bytes_per_step={step_kind: step_bytes})
+        engine.observers.append(monitor)
 
         # timestamp every scheduler tick so per-step host wall time is
         # measured individually: the async pipeline's win is a per-step
         # latency distribution shift, invisible to the mean
         ts = [time.perf_counter()]
-        results = engine.run(
-            reqs, on_step=lambda _: ts.append(time.perf_counter()))
+
+        def tick(eng):
+            ts.append(time.perf_counter())
+            monitor.on_step(eng)
+
+        results = engine.run(reqs, on_step=tick)
         dt = ts[-1] - ts[0]
         toks = engine.tokens_generated
         assert len(results) == args.requests
@@ -131,7 +167,6 @@ def main():
         assert toks == baseline_tokens, (
             f"codec {codec} generated {toks} != {baseline_tokens} tokens; "
             "us_per_token not comparable across codecs")
-        _, per_tok = engine.decode_wire_stats()
         us_per_tok = dt / toks * 1e6
         ps = engine.pool_stats()
         extra = ""
@@ -149,6 +184,27 @@ def main():
               f"pages={ps['peak_pages_in_use']}/{ps['num_pages']} "
               f"kvKBpeak={peak_kb/1e3:.1f} "
               f"kvKBdense={ps['kv_bytes_dense']/1e3:.1f}{extra}")
+        rep = monitor.report()
+        rep["wire_kb_per_tok"] = per_tok / 1e3
+        bench_results[codec] = rep
+        if args.trace_out:
+            path = args.trace_out
+            if len(codecs) > 1:
+                stem, dot, ext = path.rpartition(".")
+                path = f"{stem}.{codec}.{ext}" if dot else f"{path}.{codec}"
+            monitor.write_trace(path)
+            print(f"# step trace ({codec}): {path}", file=sys.stderr)
+
+    if args.out:
+        run_cfg = {
+            "bench": "serve_bench", "arch": args.arch, "mesh": args.mesh,
+            "slots": args.slots, "requests": args.requests,
+            "prompt_len": args.prompt_len, "gen": args.gen,
+            "page_size": args.page_size, "num_pages": args.num_pages,
+            "spec_k": args.spec_k, "async_depth": args.async_depth,
+        }
+        write_bench(args.out, make_bench_payload(run_cfg, bench_results))
+        print(f"# BENCH_serve.json: {args.out}", file=sys.stderr)
     return 0
 
 

@@ -1,0 +1,221 @@
+"""Trace-driven serving SLO benchmark: percentiles + attainment under
+realistic (bursty, multi-tenant, long-tail) arrivals and injected
+faults, emitted as the in-repo ``BENCH_serve.json`` perf trajectory.
+
+Where serve_bench.py measures steady-state throughput on a fixed batch
+of back-to-back requests, this driver replays a *seeded workload trace*
+(``repro.serving.workload``): requests arrive over time, queue, collide
+with pool pressure, and — with the fault knobs — get preempted,
+suspended, or lose their replica mid-decode.  An ``SLOMonitor`` records
+every lifecycle event and scheduler tick; the per-codec report carries
+TTFT/TPOT/stepus p50/p95/p99, SLO attainment vs the targets, queue and
+pool pressure peaks, and fault counters.  Greedy token streams stay
+bit-identical across all injected faults (the engine restarts preempted
+requests from scratch — tests/test_faults.py enforces it), so the SLO
+numbers measure *latency* degradation, never correctness.
+
+    PYTHONPATH=src python benchmarks/slo_bench.py --preset multitenant \\
+        --horizon 4 --out BENCH_serve.json
+    PYTHONPATH=src python benchmarks/slo_bench.py --p-preempt 0.05 \\
+        --p-suspend 0.01 --preset bursty
+    PYTHONPATH=src python benchmarks/slo_bench.py --smoke \\
+        --out BENCH_serve.json          # the CI bench-smoke lane
+
+``--trace-out`` exports the per-step wire-bytes trace (JSONL) that
+``repro.sim.noc.emio_cost_from_trace`` prices on the paper's EMIO
+die-to-die model, and the summary line prints that bridge's per-token
+EMIO cycles/energy alongside the host-side numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+CODECS = ("none", "spike_fused")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="engine prefill budget (trace prompts clamp)")
+    ap.add_argument("--gen", type=int, default=16,
+                    help="max generation length (trace draws clamp)")
+    ap.add_argument("--codecs", default=",".join(CODECS))
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV page pool (0: dense-equivalent; size it "
+                         "BELOW the demand to exercise pool-pressure "
+                         "preemption)")
+    ap.add_argument("--spec-k", type=int, default=0)
+    ap.add_argument("--async-depth", type=int, default=0)
+    # -- workload ----------------------------------------------------------
+    ap.add_argument("--preset", default="multitenant",
+                    help="workload preset (steady/bursty/longtail/"
+                         "multitenant)")
+    ap.add_argument("--horizon", type=float, default=4.0,
+                    help="trace horizon in trace-seconds")
+    ap.add_argument("--load", type=float, default=8.0,
+                    help="aggregate mean arrival rate (req/s)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--steps-per-s", type=float, default=50.0,
+                    help="logical replay clock: scheduler ticks per "
+                         "trace-second")
+    ap.add_argument("--wall", action="store_true",
+                    help="replay on the host wall clock instead of the "
+                         "deterministic logical clock")
+    # -- faults ------------------------------------------------------------
+    ap.add_argument("--p-preempt", type=float, default=0.0)
+    ap.add_argument("--p-replica-loss", type=float, default=0.0)
+    ap.add_argument("--p-suspend", type=float, default=0.0)
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--max-faults", type=int, default=1 << 30)
+    # -- SLO targets / outputs ---------------------------------------------
+    ap.add_argument("--ttft-ms", type=float, default=500.0)
+    ap.add_argument("--tpot-ms", type=float, default=100.0)
+    ap.add_argument("--out", default="",
+                    help="write a bench_serve/v1 BENCH_serve.json here")
+    ap.add_argument("--trace-out", default="",
+                    help="write the per-step wire-bytes trace (JSONL)")
+    ap.add_argument("--per-class", action="store_true",
+                    help="print the per-tenant TTFT/TPOT split")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI trace: 2 slots, short horizon, one "
+                         "fault of each kind, single-codec spike wire")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.slots = 2
+        args.prompt_len = 8
+        args.gen = 8
+        args.horizon = 1.0
+        args.load = 10.0
+        args.preset = "multitenant"
+        args.codecs = "spike_fused"
+        args.p_preempt = args.p_suspend = 0.08
+        args.max_faults = 4
+
+    dp, tp = (int(x) for x in args.mesh.split("x"))
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={dp * tp}")
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.configs.reduced import reduced
+    from repro.launch import specs as SP, train as TR
+    from repro.launch.mesh import make_mesh
+    from repro.serving import (EngineConfig, FaultInjector, FaultPlan,
+                               ServingEngine, SLOMonitor, SLOTargets,
+                               make_bench_payload, preset_trace, replay,
+                               write_bench)
+    from repro.sim.noc import emio_cost_from_trace
+
+    mesh = make_mesh((dp, tp), ("data", "model"))
+    max_seq = args.prompt_len + args.gen
+    trace = preset_trace(args.preset, args.horizon, seed=args.seed,
+                         prefill_len=args.prompt_len, max_gen=args.gen,
+                         load=args.load)
+    print(f"# trace: preset={args.preset} horizon={args.horizon}s "
+          f"load={args.load}/s seed={args.seed} -> {len(trace)} requests",
+          file=sys.stderr)
+    targets = SLOTargets(ttft_ms=args.ttft_ms, tpot_ms=args.tpot_ms)
+    plan_f = FaultPlan(seed=args.fault_seed, p_preempt=args.p_preempt,
+                       p_replica_loss=args.p_replica_loss,
+                       p_suspend=args.p_suspend,
+                       max_faults=args.max_faults)
+
+    bench_results = {}
+    codecs = args.codecs.split(",")
+    for codec in codecs:
+        hnn = "ann" if codec == "none" else "hnn"
+        cfg = reduced(get_config(args.arch, hnn_mode=hnn)).replace(
+            codec=codec)
+        ecfg = EngineConfig(num_slots=args.slots, max_seq=max_seq,
+                            prefill_len=args.prompt_len,
+                            page_size=args.page_size,
+                            num_pages=args.num_pages,
+                            spec_k=args.spec_k,
+                            async_depth=args.async_depth)
+        plan = SP.make_plan(cfg, ShapeCell("serve_decode", max_seq,
+                                           args.slots, "decode"), mesh)
+        params = TR.init_sharded_params(cfg, plan, mesh,
+                                        jax.random.PRNGKey(0))
+        engine = ServingEngine(cfg, mesh, params, ecfg)
+        engine.warmup(trace.requests[0].req.prompt)
+
+        _, per_tok = engine.decode_wire_stats()
+        step_kind = "verify" if engine.spec_k > 0 else "decode"
+        if step_kind == "verify":
+            _, vpt = engine.verify_wire_stats(1.0)
+            step_bytes = vpt * args.slots
+        else:
+            step_bytes = per_tok * args.slots
+        monitor = SLOMonitor(targets=targets,
+                             wire_bytes_per_step={step_kind: step_bytes})
+        injector = FaultInjector(plan_f)
+        results = replay(engine, trace, observers=(monitor, injector),
+                         steps_per_s=args.steps_per_s, wall=args.wall)
+        assert len(results) == len(trace), (len(results), len(trace))
+
+        rep = monitor.report()
+        rep["wire_kb_per_tok"] = per_tok / 1e3
+        bench_results[codec] = rep
+        emio = emio_cost_from_trace(monitor.step_trace())
+        slo = rep["slo"]
+        print(f"slo/{codec},{rep['step_us']['p50']:.1f},"
+              f"tok/s={rep['tokens_per_s']:.1f} "
+              f"ttftms p50={rep['ttft_ms']['p50']:.1f} "
+              f"p99={rep['ttft_ms']['p99']:.1f} "
+              f"tpotms p50={rep['tpot_ms']['p50']:.1f} "
+              f"p99={rep['tpot_ms']['p99']:.1f} "
+              f"stepus p95={rep['step_us']['p95']:.0f} "
+              f"attain={slo['attainment']:.2f} "
+              f"wireKB/tok={per_tok/1e3:.2f} "
+              f"preempt={rep['faults']['preemptions']} "
+              f"suspend={rep['faults']['suspends']} "
+              f"restarts={rep['requests']['restarts']} "
+              f"emio cyc/tok={emio['emio_cycles_per_token']:.0f}")
+        if args.per_class:
+            for cls, crep in monitor.per_class_report().items():
+                print(f"#   {cls}: n={crep['finished']} "
+                      f"ttftms p99={crep['ttft_ms']['p99']:.1f} "
+                      f"tpotms p99={crep['tpot_ms']['p99']:.1f}",
+                      file=sys.stderr)
+        if args.trace_out:
+            path = args.trace_out
+            if len(codecs) > 1:
+                stem, dot, ext = path.rpartition(".")
+                path = f"{stem}.{codec}.{ext}" if dot else f"{path}.{codec}"
+            monitor.write_trace(path)
+            print(f"# step trace ({codec}): {path}", file=sys.stderr)
+
+    if args.out:
+        run_cfg = {
+            "bench": "slo_bench", "arch": args.arch, "mesh": args.mesh,
+            "slots": args.slots, "prompt_len": args.prompt_len,
+            "gen": args.gen, "page_size": args.page_size,
+            "num_pages": args.num_pages, "spec_k": args.spec_k,
+            "async_depth": args.async_depth, "preset": args.preset,
+            "horizon_s": args.horizon, "load": args.load,
+            "seed": args.seed, "steps_per_s": args.steps_per_s,
+            "requests": len(trace),
+            "faults": {"seed": args.fault_seed,
+                       "p_preempt": args.p_preempt,
+                       "p_replica_loss": args.p_replica_loss,
+                       "p_suspend": args.p_suspend,
+                       "max_faults": args.max_faults},
+            "slo_targets": {"ttft_ms": args.ttft_ms,
+                            "tpot_ms": args.tpot_ms},
+        }
+        write_bench(args.out, make_bench_payload(run_cfg, bench_results))
+        print(f"# BENCH_serve.json: {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,6 +39,20 @@ scheduling, admission prefill, and page bookkeeping overlap the device
 step.  Greedy token streams are bit-identical to ``--async-depth 0``;
 see ``benchmarks/serve_bench.py`` for the measured per-step latency
 histogram.
+
+Pool pressure + graceful degradation
+------------------------------------
+Shrink ``--num-pages`` below the dense reservation and the pool — not
+the slot count — becomes the binding limit.  When a mid-decode slot
+cannot map its next page, the engine (by default) evicts + re-queues
+the youngest slot of the starving group and restarts it on re-admit:
+greedy streams stay bit-identical, only latency pays, and the report
+prints the preemption count.  ``--no-preempt`` restores the raw typed
+``PagePoolExhausted``.  For SLO percentiles under trace-driven load and
+injected faults, see ``benchmarks/slo_bench.py``.
+
+    PYTHONPATH=src python examples/serve_hnn.py --mesh 1x2 --slots 4 \
+        --page-size 8 --num-pages 10
 """
 import argparse
 import time
@@ -88,6 +102,10 @@ def main():
     ap.add_argument("--repetitive", action="store_true",
                     help="cyclic prompts (speculative decoding's best "
                          "case: the n-gram drafter matches)")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable pool-pressure preemption: a starving "
+                         "slot raises typed PagePoolExhausted instead "
+                         "of evicting + re-queueing the youngest slot")
     args = ap.parse_args()
 
     dp, tp = (int(x) for x in args.mesh.split("x"))
@@ -102,7 +120,8 @@ def main():
                         num_pages=args.num_pages,
                         top_k=args.top_k, top_p=args.top_p,
                         spec_k=args.spec_k,
-                        async_depth=args.async_depth)
+                        async_depth=args.async_depth,
+                        preempt=not args.no_preempt)
 
     cell = ShapeCell("serve_decode", ecfg.max_seq, ecfg.num_slots, "decode")
     plan = SP.make_plan(cfg, cell, mesh)
@@ -144,6 +163,10 @@ def main():
           f"pages x {ps['page_size']} positions  "
           f"mapped {peak_kb:.1f}KB at peak vs "
           f"{ps['kv_bytes_dense']/1e3:.1f}KB dense per-slot reservation")
+    if engine.preemptions:
+        print(f"pool pressure: {engine.preemptions} preemption(s) — "
+              "evicted + re-queued youngest slots; greedy outputs are "
+              "unchanged, only latency paid")
     if engine.spec_k > 0:
         mal = engine.mean_accepted_len
         _, vper_tok = engine.verify_wire_stats(mal)

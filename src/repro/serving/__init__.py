@@ -1,9 +1,10 @@
 """Batched serving: continuous batching, block-table paged KV (shared
 device page pool), on-device sampling, self-drafting speculative
-decoding, and async dispatch/commit decode streams over the
-spike-coded wire.
+decoding, async dispatch/commit decode streams over the spike-coded
+wire, and an SLO harness (trace-driven workloads, fault injection,
+BENCH_serve.json perf trajectory).
 
-``EngineConfig`` knobs (the four that shape the serving regime):
+``EngineConfig`` knobs (the five that shape the serving regime):
 
 ===============  ========================================================
 ``async_depth``  Decode steps the host may dispatch ahead of the oldest
@@ -27,7 +28,34 @@ spike-coded wire.
                  ``ceil(prompt_len / page_size)`` pages; decode maps one
                  more page per ``page_size`` generated tokens
                  (alloc-on-extend).
+``preempt``      Graceful degradation under pool pressure (default on):
+                 a mid-flight ``PagePoolExhausted`` drains the pipeline
+                 (limbo pages rejoin the pool) and then evicts +
+                 re-queues the YOUNGEST slot of the starving group,
+                 restarting it from scratch on re-admit — greedy streams
+                 stay bit-identical to an uninterrupted run
+                 (fuzz-enforced), so only latency pays.  False: the
+                 typed error propagates to the caller's own policy.
 ===============  ========================================================
+
+SLO harness knobs (``repro.serving.workload`` / ``repro.serving.slo``):
+
+==================  =====================================================
+``RequestClass``    One tenant's traffic model: ``poisson`` or bursty
+                    ``onoff`` arrivals at ``rate`` req/s, prompt/gen
+                    length ranges, a long-context ``tail_p``/``tail_len``
+                    minority, temperature.
+``PRESETS``         Named trace mixes (``steady`` / ``bursty`` /
+                    ``longtail`` / ``multitenant``) scaled to the engine
+                    budget; ``replay`` drives an engine through a trace
+                    on a deterministic logical clock (or wall clock).
+``SLOTargets``      Per-request TTFT/TPOT targets the attainment numbers
+                    in ``SLOMonitor.report()`` are judged against.
+``FaultPlan``       Seeded per-tick fault probabilities (``p_preempt``,
+                    ``p_replica_loss``, ``p_suspend``) the
+                    ``FaultInjector`` rolls once per tick — same seed,
+                    same faults, so identity tests replay exactly.
+==================  =====================================================
 """
 from .draft import NGramDrafter
 from .engine import (WARMUP_RID, EngineConfig, Request, ServingEngine,
@@ -37,10 +65,20 @@ from .errors import (CacheOverflowError, EngineConfigError,
                      PagePoolExhausted, SchedulerStall, SlotsExhausted)
 from .kv_cache import PagedKVCache, SlotAllocator
 from .sampling import SamplingConfig, sample, sample_verify
+from .slo import (BENCH_SCHEMA, FaultInjector, FaultPlan, SLOMonitor,
+                  SLOTargets, load_bench, make_bench_payload,
+                  validate_bench, write_bench)
+from .workload import (PRESETS, RequestClass, Trace, TracedRequest,
+                       make_trace, preset_trace, replay, zoo_mix)
 
-__all__ = ["CacheOverflowError", "EngineConfig", "EngineConfigError",
-           "NGramDrafter", "PagePoolExhausted", "PagedKVCache", "Request",
+__all__ = ["BENCH_SCHEMA", "CacheOverflowError", "EngineConfig",
+           "EngineConfigError", "FaultInjector", "FaultPlan",
+           "NGramDrafter", "PRESETS", "PagePoolExhausted", "PagedKVCache",
+           "Request", "RequestClass", "SLOMonitor", "SLOTargets",
            "SamplingConfig", "SchedulerStall", "ServingEngine",
-           "SlotAllocator", "SlotsExhausted", "WARMUP_RID", "sample",
-           "sample_verify", "make_engine_decode_step",
-           "make_engine_prefill_step", "make_engine_verify_step"]
+           "SlotAllocator", "SlotsExhausted", "Trace", "TracedRequest",
+           "WARMUP_RID", "load_bench", "make_bench_payload", "make_trace",
+           "preset_trace", "replay", "sample", "sample_verify",
+           "validate_bench", "write_bench", "zoo_mix",
+           "make_engine_decode_step", "make_engine_prefill_step",
+           "make_engine_verify_step"]

@@ -52,7 +52,26 @@ outputs to requests) and the pages it touched return through the
 cache's deferred-free epoch, never to a concurrently-dispatched
 snapshot.  Prefill admits are issued eagerly between decode dispatches
 (the prefill overlaps the in-flight step; the new slot joins the batch
-at the next dispatch).  Under greedy sampling the async schedule is
+at the next dispatch), and admission itself never syncs: the prefill's
+sampled first token stays a DEVICE array (``_Slot.pending_first``)
+that the next decode feed patches straight in; its value folds into
+host bookkeeping at the slot's first commit — by which point the sync
+is free — or at a verify dispatch (drafting needs host tokens).
+
+Graceful degradation: when a live slot cannot map its next page
+(``PagePoolExhausted``) and ``EngineConfig.preempt`` is on, the engine
+first drains the pipeline (deferred-free limbo pages rejoin the pool at
+commit) and then evicts + re-queues the YOUNGEST slot of the starving
+pool group, restarting it from scratch on re-admit — under greedy
+sampling the restarted stream is bit-identical to an uninterrupted run,
+so preemption shows up only in latency, never in tokens
+(tests/test_faults.py).  ``preempt_slot`` exposes the same move to
+fault injectors (``repro.serving.slo.FaultInjector``), and
+``suspend``/``resume`` drain + snapshot + re-admit the whole engine for
+simulated host preemption or replica loss.  Observer objects appended
+to ``engine.observers`` receive ``on_submit`` / ``on_admit`` /
+``on_first_token`` / ``on_finish`` / ``on_preempt`` / ``on_suspend``
+lifecycle callbacks (see ``repro.serving.slo.SLOMonitor``).  Under greedy sampling the async schedule is
 token-identical to the sync loop — per-slot streams are batch-
 independent and the chained device tokens are the very same values the
 host would have fed back — asserted by ``tests/test_engine_fuzz.py``
@@ -157,6 +176,11 @@ class EngineConfig:
     async_depth: int = 0           # decode steps the host may dispatch
     #                                ahead of the oldest un-synced step
     #                                (0: classic synchronous loop)
+    preempt: bool = True           # on PagePoolExhausted mid-flight,
+    #                                evict + re-queue the youngest slot
+    #                                in the starving pool group instead
+    #                                of failing the step (False: the
+    #                                typed error propagates)
 
 
 @dataclasses.dataclass
@@ -169,6 +193,14 @@ class _Slot:
     #: scheduled for future dispatches; False once the host knows (or
     #: can predict) the request is finished
     live: bool = True
+    #: admission order (monotonic engine counter) — preemption picks
+    #: victims youngest-first so the oldest request always progresses
+    seq: int = 0
+    #: the admit prefill's sampled first token, still a DEVICE [1] array
+    #: (deferred first-token sync: the host never blocks on it at admit;
+    #: the value folds into host bookkeeping at the slot's first commit,
+    #: at verify dispatch, or when nothing else can run)
+    pending_first: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -361,16 +393,29 @@ class ServingEngine:
         #: round-trip (None until the first decode dispatch)
         self._tok_dev = None
         #: slots whose next feed token must come from the host shadow
-        #: (``self._tokens``) instead of the chained device array —
-        #: freshly admitted slots, whose first token the device output
-        #: never carried
+        #: (``self._tokens``) — slots whose deferred first token has
+        #: been folded to the host since the last decode dispatch
         self._tok_dirty: set[int] = set()
+        #: slot -> device [1] first-token array from the admit prefill:
+        #: the next decode feed patches these straight from the device
+        #: (the value never visits the host on the admission path)
+        self._tok_pending: dict[int, object] = {}
+        self._admit_seq = 0
         self._key = jax.random.PRNGKey(ecfg.seed)
         self._tick = 0
         self.tokens_generated = 0
         self.decode_steps = 0
         self.spec_commits = 0      # tokens committed by verify steps
         self.spec_verifies = 0     # (slot, verify-step) participations
+        self.preemptions = 0       # evict + re-queue events (pool
+        #                            pressure or injected faults)
+        self.suspends = 0          # drain + snapshot + resume events
+        #: observability hooks: objects whose optional ``on_submit`` /
+        #: ``on_admit`` / ``on_first_token`` / ``on_finish`` /
+        #: ``on_preempt`` / ``on_suspend`` methods are called at the
+        #: matching lifecycle points (see ``repro.serving.slo``); the
+        #: per-tick ``on_step`` hook stays on ``run(on_step=...)``
+        self.observers: list = []
 
     # -- request lifecycle -------------------------------------------------
 
@@ -395,21 +440,32 @@ class ServingEngine:
                 f"(num_pages={self.num_pages}): the request could never "
                 "be admitted")
         self._queue.append(req)
+        self._emit("on_submit", req.rid, P_len)
+
+    def _emit(self, event: str, *args):
+        for obs in self.observers:
+            fn = getattr(obs, event, None)
+            if fn is not None:
+                fn(*args)
 
     def _next_key(self):
         self._tick += 1
         return jax.random.fold_in(self._key, self._tick)
 
     def _admit(self, req: Request):
-        """Prefill ``req`` into a free slot.
+        """Prefill ``req`` into a free slot — with NO host sync.
 
         The prefill/insert launches are asynchronous, so under
         ``async_depth > 0`` they overlap whatever decode/verify step is
         currently in flight (XLA orders them behind it on the donated
-        cache buffers); only the single first-token scalar is synced
-        here, for EOS/limit bookkeeping.  The new slot joins the batched
-        feed at the NEXT dispatch (its token is marked host-dirty and
-        patched over the chained device tokens).
+        cache buffers).  The first sampled token stays a DEVICE array
+        (``_Slot.pending_first``): the next decode dispatch patches it
+        straight into the chained token feed, so admission never blocks
+        the host on a fresh prefill.  The value folds into host
+        bookkeeping (``out``, EOS check, drafter seed) at the slot's
+        first commit — by which time the prefill has long executed and
+        the sync is free — or earlier when the spec path needs host
+        tokens to draft.
         """
         P_len = len(req.prompt)
         toks = np.zeros((1, self.prefill_len), np.int32)
@@ -420,28 +476,70 @@ class ServingEngine:
         # admit maps ceil(P_len/page_size) pages — O(prompt), not
         # O(max_seq); each decode step maps the next page on demand
         slot = self.cache.admit(pre_cache, P_len)
-        first = int(np.asarray(first)[0])
-        drafter = None
-        if self.spec_k > 0:
-            drafter = NGramDrafter(list(req.prompt) + [first])
-        self._slots[slot] = _Slot(req, [first], drafter)
-        self._tokens[slot] = first
+        st = _Slot(req, [], None, seq=self._admit_seq, pending_first=first)
+        self._admit_seq += 1
+        self._slots[slot] = st
         self._pos[slot] = P_len
         self._temp[slot] = req.temperature
-        self._tok_dirty.add(slot)
+        self._tok_dirty.discard(slot)
+        self._tok_pending[slot] = first
         self.tokens_generated += 1
-        self._maybe_retire(slot, first)
+        self._emit("on_admit", req.rid, slot)
+        # retirement the host can predict WITHOUT the token value (count
+        # and context limits) applies now so the slot is never scheduled;
+        # the deferred value still folds later for the output/EOS
+        if (st.req.max_new_tokens <= 1
+                or self._committed_pos(st) >= self.ecfg.max_seq):
+            st.live = False
+
+    def _n_committed(self, st: _Slot) -> int:
+        """Tokens the request has generated as far as the host is
+        concerned: the committed ``out`` plus the admit prefill's
+        deferred first token (generated, value just not yet synced)."""
+        return len(st.out) + (1 if st.pending_first is not None else 0)
 
     def _committed_pos(self, st: _Slot) -> int:
         """The slot's committed cache occupancy / next write position.
 
         Derived, not stored: admit leaves ``prompt + [first]`` at
         occupancy ``len(prompt)``, and every committed token advances
-        both ``out`` and the position by one — so the dispatch-side
-        ``self._pos`` (which runs ahead of the host under overlap) can
-        never be confused with what has actually been committed.
+        both the token count and the position by one — so the
+        dispatch-side ``self._pos`` (which runs ahead of the host under
+        overlap) can never be confused with what has been committed.
         """
-        return len(st.req.prompt) + len(st.out) - 1
+        return len(st.req.prompt) + self._n_committed(st) - 1
+
+    def _fold_first(self, slot: int, st: _Slot) -> bool:
+        """Sync the deferred admit token into host bookkeeping.
+
+        Returns True iff the slot is still occupied by ``st`` afterwards
+        (folding runs the EOS/limit retirement check the admit path
+        deferred, so it may retire the slot).  No-op when nothing is
+        pending.  The sync is effectively free at every call site: the
+        prefill that produced the value has already been overlapped by
+        at least one dispatched step (or the pipeline is idle).
+        """
+        if st.pending_first is None:
+            return self._slots[slot] is st
+        first = int(np.asarray(st.pending_first)[0])
+        st.pending_first = None
+        st.out.append(first)
+        self._tokens[slot] = first
+        if self._tok_pending.pop(slot, None) is not None:
+            # the device-side feed patch never consumed this value; the
+            # next feed takes it from the (now correct) host shadow
+            self._tok_dirty.add(slot)
+        if self.spec_k > 0 and st.drafter is None:
+            st.drafter = NGramDrafter(list(st.req.prompt) + [first])
+        self._emit("on_first_token", st.req.rid)
+        self._maybe_retire(slot, first)
+        return self._slots[slot] is st
+
+    def _fold_pending(self):
+        """Fold every slot still carrying a deferred first token."""
+        for i, st in enumerate(self._slots):
+            if st is not None and st.pending_first is not None:
+                self._fold_first(i, st)
 
     def _maybe_retire(self, slot: int, tok: int):
         st = self._slots[slot]
@@ -459,12 +557,19 @@ class ServingEngine:
             self.cache.evict(slot)
             self._slots[slot] = None
             self._retired.append((st.req, st.out))
+            self._emit("on_finish", st.req.rid, len(st.out))
 
     # -- scheduling --------------------------------------------------------
 
     @property
     def num_active(self) -> int:
         return sum(s is not None for s in self._slots)
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests admitted-but-waiting (the backpressure signal SLO
+        monitors and admission routers read every tick)."""
+        return len(self._queue)
 
     @property
     def idle(self) -> bool:
@@ -474,6 +579,84 @@ class ServingEngine:
     def _live_slots(self) -> list:
         return [i for i, s in enumerate(self._slots)
                 if s is not None and s.live]
+
+    def active_slots(self) -> list:
+        """Occupied slot indices, oldest admission first — the fault
+        injector's victim menu (``[-1]`` is the youngest)."""
+        return sorted((i for i, s in enumerate(self._slots)
+                       if s is not None),
+                      key=lambda i: self._slots[i].seq)
+
+    # -- faults / graceful degradation -------------------------------------
+
+    def preempt_slot(self, slot: int, kind: str = "preempt"):
+        """Evict ``slot`` and re-queue its request at the FRONT of the
+        admission queue, restarting generation from scratch on re-admit.
+
+        Restart-from-scratch keeps the house token-identity rule: under
+        greedy sampling the regenerated stream is bit-identical to the
+        uninterrupted run (per-slot streams are batch-independent and
+        greedy ignores the PRNG key), so a preemption is invisible in
+        the final output — only in the request's latency.  Tokens
+        generated so far are discarded rather than resumed: resuming
+        mid-stream would need the slot's KV snapshot off-device, which
+        is exactly the cost preemption exists to avoid.  Pages freed
+        here park in the allocator's deferred-free limbo while any
+        dispatched step's snapshot still names them, and an in-flight
+        step's column for this slot is discarded at commit by
+        slot-object identity — safe to call mid-pipeline (the fault
+        injector does).  ``on_preempt`` observers fire with
+        ``(rid, kind)``; ``kind`` distinguishes ``pool_pressure`` from
+        injected faults (``injected_preempt``, ``replica_loss``).
+        """
+        st = self._slots[slot]
+        if st is None:
+            raise ValueError(f"preempt_slot: slot {slot} is free")
+        st.live = False
+        self.cache.evict(slot)
+        self._slots[slot] = None
+        self._tok_pending.pop(slot, None)
+        self._tok_dirty.discard(slot)
+        self.preemptions += 1
+        self._queue.appendleft(st.req)
+        self._emit("on_preempt", st.req.rid, kind)
+
+    def suspend(self) -> list:
+        """Simulated host preemption: drain the pipeline, snapshot every
+        pending request, and release all slots + pages.
+
+        Returns the requests still owed output — mid-generation slots in
+        admission order, then the untouched queue — for ``resume``.
+        Mid-generation requests restart from scratch on resume (greedy
+        token identity makes the interruption invisible in the output);
+        requests that FINISHED during the drain retire normally and are
+        not suspended.  After this the engine holds no device-side
+        request state: pages are back in the pool and the chained token
+        feed is reset, so the caller may checkpoint, migrate, or simply
+        ``resume`` in place.
+        """
+        self.flush()
+        self._fold_pending()
+        reqs = []
+        for i in self.active_slots():
+            st = self._slots[i]
+            self.cache.evict(i)
+            self._slots[i] = None
+            reqs.append(st.req)
+        self._emit("on_suspend", [r.rid for r in reqs])
+        self._tok_pending.clear()
+        self._tok_dirty.clear()
+        self._tok_dev = None
+        reqs.extend(self._queue)
+        self._queue.clear()
+        self.suspends += 1
+        return reqs
+
+    def resume(self, requests: Sequence[Request]):
+        """Re-admit ``suspend``'s snapshot at the front of the queue in
+        its original order; admission proceeds on the next tick."""
+        for r in reversed(list(requests)):
+            self._queue.appendleft(r)
 
     def step(self) -> list:
         """One scheduler tick: dispatch what can run, commit what must.
@@ -493,9 +676,15 @@ class ServingEngine:
         queued.  Before a device step launches, every scheduled slot
         maps pages covering the positions the step will write
         (alloc-on-extend) — if a live slot cannot grow because its pool
-        group is empty, ``PagePoolExhausted`` propagates: the pool, not
-        the slot count, is the binding limit, and the operator sized
-        ``num_pages`` below the workload's concurrent-context demand.
+        group is empty, the engine degrades gracefully
+        (``EngineConfig.preempt``, default on): drain the pipeline so
+        limbo pages rejoin the pool, then evict + re-queue the YOUNGEST
+        slot of the starving group and retry (``_ensure_for_step``).
+        With ``preempt=False`` — or when the group holds a single live
+        slot, which preemption could never help — ``PagePoolExhausted``
+        propagates: the pool, not the slot count, is the binding limit,
+        and the operator sized ``num_pages`` below even one request's
+        demand.
         """
         dispatched = self.dispatch()
         target = self.async_depth if dispatched else 0
@@ -514,13 +703,22 @@ class ServingEngine:
         if self.spec_k > 0:
             # drafting reads committed tokens: join the pipeline first
             # (the admissions above already overlapped the in-flight
-            # verify step — that is the spec path's share of the win)
+            # verify step — that is the spec path's share of the win),
+            # then fold every deferred admit token so the drafters and
+            # the host token shadow the verify feed reads are real
             self.flush()
+            self._fold_pending()
             live = self._live_slots()
             if not live:
                 return False
             self._dispatch_verify(live)
             return True
+        # slots retired-by-prediction at admit (max_new_tokens == 1,
+        # context already full) are never scheduled, so no commit will
+        # ever fold their deferred token: fold it here or they leak
+        for i, st in enumerate(self._slots):
+            if st is not None and not st.live and st.pending_first is not None:
+                self._fold_first(i, st)
         live = self._live_slots()
         if not live:
             return False
@@ -576,7 +774,11 @@ class ServingEngine:
 
         Chains the previous dispatch's sampled-token device array
         straight back in — the values never visit the host — and
-        patches freshly admitted slots from the host shadow copy.
+        patches freshly admitted slots straight from their prefill's
+        DEVICE first-token array (``_tok_pending``), so admission never
+        syncs either: the whole prefill -> first decode chain stays on
+        device.  Slots whose deferred token was folded to the host in
+        the meantime re-enter from the host shadow (``_tok_dirty``).
         Slots retired between the two dispatches keep whatever the
         device array carries: their block-table rows are already -1 (or
         owned by a new occupant that is itself patched here), so the
@@ -584,21 +786,77 @@ class ServingEngine:
         """
         if self._tok_dev is None:
             self._tok_dirty.clear()
-            return self._stage(self._tokens, self._feed_specs["token"])
-        feed = self._tok_dev
-        if self._tok_dirty:
-            idx = np.asarray(sorted(self._tok_dirty), np.int32)
-            feed = feed.at[idx].set(self._tokens[idx])
-            self._tok_dirty.clear()
+            feed = self._stage(self._tokens, self._feed_specs["token"])
+        else:
+            feed = self._tok_dev
+            if self._tok_dirty:
+                idx = np.asarray(sorted(self._tok_dirty), np.int32)
+                feed = feed.at[idx].set(self._tokens[idx])
+                self._tok_dirty.clear()
+        if self._tok_pending:
+            for s in sorted(self._tok_pending):
+                feed = feed.at[s].set(self._tok_pending[s][0])
+            self._tok_pending.clear()
         return feed
 
+    def _ensure_for_step(self, live, need):
+        """Map every page the next step will write (``need(slot)`` is the
+        occupancy it must cover) — with graceful degradation.
+
+        On ``PagePoolExhausted`` (the pool, not the slot count, is the
+        binding limit) and ``ecfg.preempt``: first drain the pipeline —
+        deferred-free limbo pages from late retirements/rollbacks rejoin
+        the pool at commit — and if the starving slot's group is STILL
+        dry, evict + re-queue the YOUNGEST slot in that group and retry.
+        Youngest-first preserves the progress guarantee: the oldest
+        request is never the victim, so every preemption strictly
+        advances the admission order and the scheduler cannot livelock.
+        A group with a single live slot is never preempted against
+        itself — the typed error propagates, exactly as with
+        ``preempt=False`` (the operator sized ``num_pages`` below even
+        one request's demand).  Returns the (possibly shrunk) live list.
+        ``ensure`` is idempotent per page, so retrying the loop after a
+        partial pass never double-maps.
+        """
+        alloc = self.cache.allocator
+        while True:
+            try:
+                for i in live:
+                    self.cache.ensure(i, need(i))
+                return live
+            except PagePoolExhausted:
+                if not self.ecfg.preempt:
+                    raise
+                starving = i
+            if self._inflight:
+                self.flush()      # commits release limbo pages; they may
+                #                   also retire slots (late EOS) or fold
+                #                   deferred tokens — refresh and retry
+                live = [j for j in live
+                        if self._slots[j] is not None and self._slots[j].live]
+                continue
+            grp = alloc.group_of(starving)
+            victims = [j for j in live if alloc.group_of(j) == grp]
+            if len(victims) < 2:
+                # preempting the sole live slot of its group would free
+                # its pages only to starve again on re-admit: retry once
+                # so the typed error propagates (unless the flush above
+                # retired the starving slot, in which case this passes)
+                for i in live:
+                    self.cache.ensure(i, need(i))
+                return live
+            victim = max(victims, key=lambda j: self._slots[j].seq)
+            self.preempt_slot(victim, kind="pool_pressure")
+            live = [j for j in live if j != victim]
+
     def _dispatch_decode(self, live):
-        for i in live:
-            # the step writes KV at position pos: map its page first.
-            # Under overlap a slot here may already be finished at a
-            # still-uncommitted step (late EOS) — its page comes back
-            # through the deferred-free epoch at that step's commit.
-            self.cache.ensure(i, int(self._pos[i]) + 1)
+        # the step writes KV at position pos: map its page first.  Under
+        # overlap a slot here may already be finished at a
+        # still-uncommitted step (late EOS) — its page comes back
+        # through the deferred-free epoch at that step's commit.
+        live = self._ensure_for_step(live, lambda i: int(self._pos[i]) + 1)
+        if not live:
+            return
         tok = self._token_feed()
         pos = self._stage(self._pos, self._feed_specs["pos"])
         bt = self._stage(self.cache.block_table, self._feed_specs["bt"])
@@ -617,8 +875,9 @@ class ServingEngine:
             # predictable retirement (token count, context end) applies
             # at dispatch so a finished slot never gets scheduled again;
             # EOS is only discoverable at commit, one step late under
-            # overlap, and that zombie step's column is discarded
-            if (len(st.out) + st.inflight >= st.req.max_new_tokens
+            # overlap, and that zombie step's column is discarded.
+            # _n_committed counts the deferred admit token too.
+            if (self._n_committed(st) + st.inflight >= st.req.max_new_tokens
                     or int(self._pos[i]) >= self.ecfg.max_seq):
                 st.live = False
 
@@ -633,14 +892,17 @@ class ServingEngine:
         """
         k = self.spec_k
         n = self.ecfg.num_slots
+        # the verify step writes KV at pos..pos+k (clipped at the
+        # context end): map those pages before launching; the rejected
+        # tail's pages roll back once acceptance is known
+        live = self._ensure_for_step(
+            live, lambda i: min(int(self._pos[i]) + k + 1,
+                                self.ecfg.max_seq))
+        if not live:
+            return
         drafts = np.zeros((n, k), np.int32)
         for i in live:
             drafts[i] = self._slots[i].drafter.propose(k)
-            # the verify step writes KV at pos..pos+k (clipped at the
-            # context end): map those pages before launching; the
-            # rejected tail's pages roll back once acceptance is known
-            self.cache.ensure(i, min(int(self._pos[i]) + k + 1,
-                                     self.ecfg.max_seq))
         tok_in = self._stage(
             np.concatenate([self._tokens[:, None], drafts], axis=1),
             self._feed_specs["vtoken"])
@@ -665,9 +927,15 @@ class ServingEngine:
     def _commit_decode(self, rec: _InFlight, out: np.ndarray):
         for i, st in rec.entries:
             if self._slots[i] is not st:
-                continue     # retired at an earlier commit (late EOS) or
-                #              slot re-admitted: discard the zombie column
+                continue     # retired at an earlier commit (late EOS),
+                #              preempted, or slot re-admitted: discard
+                #              the zombie column
             st.inflight -= 1
+            if not self._fold_first(i, st):
+                continue     # the deferred admit token was EOS: the slot
+                #              retired at fold and this step's column is
+                #              a zombie (its write already landed beyond
+                #              the retired occupancy — dropped on device)
             tok = int(out[i])
             st.out.append(tok)
             self._tokens[i] = tok
@@ -762,6 +1030,8 @@ class ServingEngine:
         self.decode_steps = 0
         self.spec_commits = 0
         self.spec_verifies = 0
+        self.preemptions = 0
+        self.suspends = 0
         # the pool high-water mark is a stat too: warmup's throwaway
         # admission must not overstate the measured run's peak
         self.cache.peak_pages_in_use = self.cache.allocator.pages_in_use
@@ -817,7 +1087,10 @@ class ServingEngine:
         ``kv_bytes_dense`` is what the pre-paging layout reserved
         (every slot charged ``pages_per_slot`` pages up front) — the
         ``kv_bytes_pool``/``kv_bytes_dense`` ratio is the HBM the block
-        table frees for more slots at equal hardware.
+        table frees for more slots at equal hardware.  ``pressure`` is
+        the fraction of the pool mapped or in limbo (1.0 = the next
+        alloc-on-extend is at the mercy of preemption) — the signal SLO
+        monitors trend per step.
         """
         alloc = self.cache.allocator
         return {
@@ -825,6 +1098,7 @@ class ServingEngine:
             "num_pages": alloc.num_pages,
             "pages_in_use": alloc.pages_in_use,
             "pages_in_limbo": alloc.pages_in_limbo,
+            "pressure": alloc.pressure,
             "peak_pages_in_use": self.cache.peak_pages_in_use,
             "kv_bytes_mapped": self.cache.kv_bytes_mapped(),
             "kv_bytes_pool": self.cache.kv_bytes_pool(),

@@ -20,6 +20,14 @@ Hierarchy:
 admission means the same, but raised from a mid-flight ``ensure`` it
 means the operator sized ``num_pages`` below the workload's concurrent
 context demand — the pool, not the slot count, is the binding limit.
+With ``EngineConfig.preempt`` (the default) a mid-flight
+``PagePoolExhausted`` is absorbed by graceful degradation — the engine
+evicts + re-queues the youngest slot of the starving group and retries
+(``engine.preemptions`` counts these) — and only escapes to the caller
+when preemption could not possibly help: the starving group has a
+single live slot, i.e. the pool cannot hold even one request's demand.
+``preempt=False`` restores the raw typed error for schedulers that
+implement their own policy.
 
 Async serving (``EngineConfig.async_depth > 0``) shifts WHEN, not
 WHETHER, these fire: pages freed by a retirement or rollback park in

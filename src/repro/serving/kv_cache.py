@@ -21,6 +21,10 @@ pages must live on its own dp group's tp shards), per-slot page lists,
 alloc-on-extend (``ensure``), and page-exact ``rollback``/``free`` that
 return the tail's pages to the pool.  Exhaustion is typed:
 ``SlotsExhausted`` vs ``PagePoolExhausted`` (see ``serving.errors``).
+Reclamation under pressure is the engine's job, built on this
+allocator's primitives: pool-pressure preemption (``free`` the victim,
+re-admit later) and replica-loss/suspend paths all return pages through
+the same ``free``/limbo machinery, so a fault can never leak a page.
 
 Deferred-free epochs (async serving): when the engine pipelines decode
 steps (``EngineConfig.async_depth > 0``) it dispatches step t+1 before
@@ -149,6 +153,15 @@ class SlotAllocator:
         """Pages freed but not yet safe to remap (an uncommitted device
         step's block-table snapshot may still name them)."""
         return len(self._limbo)
+
+    @property
+    def pressure(self) -> float:
+        """Fraction of the pool unavailable for new mappings (mapped or
+        parked in limbo).  1.0 means the next alloc-on-extend in a dry
+        group triggers the engine's pool-pressure preemption path (or
+        a typed ``PagePoolExhausted`` with ``preempt=False``) — the
+        per-step signal ``repro.serving.slo.SLOMonitor`` trends."""
+        return (self.pages_in_use + self.pages_in_limbo) / self.num_pages
 
     # -- deferred-free epochs (async dispatch/commit) ----------------------
 

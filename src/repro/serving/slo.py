@@ -1,0 +1,455 @@
+"""Serving observability: per-request SLOs, fault injection, BENCH JSON.
+
+Three pieces, all host-side and engine-agnostic (they attach to a
+``ServingEngine`` through its observer hooks plus the ``on_step``
+callback — no hot-path device work):
+
+``SLOMonitor``
+    Records the request lifecycle (submit -> first token -> finish,
+    preemptions/restarts in between) and one ``StepEvent`` per scheduler
+    tick (host latency, step kind, tokens committed, queue depth, pool
+    pressure, wire bytes).  ``report()`` reduces that to the production
+    questions: TTFT/TPOT/step-latency p50/p95/p99 and SLO *attainment*
+    — the fraction of finished requests meeting the ``SLOTargets`` —
+    plus queue/pool pressure peaks and fault counts.  TTFT is measured
+    from the ORIGINAL submit, so a preempted-and-re-served request pays
+    its requeue penalty in the percentiles instead of hiding it.
+
+``FaultInjector``
+    A seeded chaos source driven once per tick: pool-pressure-style
+    preemption of the youngest slot (``p_preempt``), replica loss of a
+    random active slot (``p_replica_loss``, pages reclaimed + request
+    re-admitted from the queue), and simulated host preemption
+    (``p_suspend``: drain the pipeline, snapshot every in-flight
+    request, resume).  All three ride the engine's graceful-degradation
+    paths, which the fault fuzz (tests/test_faults.py) gates on greedy
+    token-identity with an uninterrupted run.
+
+``BENCH_serve.json`` emitter
+    ``make_bench_payload`` / ``write_bench`` / ``load_bench`` define the
+    in-repo perf-trajectory artifact (schema ``bench_serve/v1``): run
+    config + per-codec tokens/s, stepus/TTFT/TPOT percentiles, wire
+    KB/token, SLO attainment, fault counters.  ``validate_bench`` is
+    the schema gate CI's bench-smoke lane fails on, so the trajectory
+    can't silently rot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .engine import WARMUP_RID
+
+__all__ = ["BENCH_SCHEMA", "FaultInjector", "FaultPlan", "SLOMonitor",
+           "SLOTargets", "StepEvent", "load_bench", "make_bench_payload",
+           "percentiles", "validate_bench", "write_bench"]
+
+#: Schema tag every BENCH_serve.json carries; bump on breaking changes.
+BENCH_SCHEMA = "bench_serve/v1"
+
+
+# ---------------------------------------------------------------------------
+# percentile helpers
+# ---------------------------------------------------------------------------
+
+
+def percentiles(xs: Sequence[float]) -> Dict[str, float]:
+    """{"p50","p95","p99","mean","n"} of ``xs`` (zeros when empty)."""
+    xs = np.asarray(list(xs), np.float64)
+    if xs.size == 0:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0, "n": 0}
+    p50, p95, p99 = np.percentile(xs, [50, 95, 99])
+    return {"p50": float(p50), "p95": float(p95), "p99": float(p99),
+            "mean": float(xs.mean()), "n": int(xs.size)}
+
+
+# ---------------------------------------------------------------------------
+# SLO monitor
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOTargets:
+    """Per-request targets the attainment numbers are judged against."""
+
+    ttft_ms: float = 500.0           # submit -> first token
+    tpot_ms: float = 100.0           # mean per-token after the first
+
+
+@dataclasses.dataclass
+class StepEvent:
+    """One scheduler tick's measurements."""
+
+    t: float                         # monitor-clock timestamp (s)
+    dt: float                        # host wall time since previous tick
+    kind: str                        # "decode" | "verify"
+    tokens: int                      # tokens committed during the tick
+    queue_depth: int
+    active: int
+    pages_in_use: int
+    pages_in_limbo: int
+    wire_bytes: float                # total die-to-die bytes the tick's
+    #                                  device step moved (0 if unknown)
+
+
+@dataclasses.dataclass
+class _ReqRecord:
+    cls: str
+    prompt_len: int
+    t_submit: float                  # ORIGINAL submit (restarts keep it)
+    t_first: Optional[float] = None
+    t_finish: Optional[float] = None
+    n_tokens: int = 0
+    restarts: int = 0
+
+
+class SLOMonitor:
+    """Engine observer + ``on_step`` recorder; see module docstring.
+
+    Attach with ``engine.observers.append(monitor)`` (or pass it to
+    ``workload.replay``) and call ``monitor.on_step(engine)`` after
+    every tick — ``engine.run(..., on_step=monitor.on_step)`` does.
+    ``wire_bytes_per_step`` maps step kind -> total die-to-die bytes of
+    one compiled step (from ``engine.decode_wire_stats()``), so the
+    step trace can feed the NoC co-simulation
+    (``repro.sim.noc.emio_cost_from_trace``).
+    """
+
+    def __init__(self, targets: Optional[SLOTargets] = None,
+                 wire_bytes_per_step: Optional[Dict[str, float]] = None,
+                 clock=time.perf_counter):
+        self.targets = targets or SLOTargets()
+        self.wire_bytes_per_step = wire_bytes_per_step or {}
+        self.clock = clock
+        self.requests: Dict[object, _ReqRecord] = {}
+        self.steps: List[StepEvent] = []
+        self.preemptions = 0
+        self.suspends = 0
+        self._t_last: Optional[float] = None
+        self._tokens_last = 0
+        self._steps_last = 0
+
+    # -- engine observer hooks (duck-typed; all optional) ------------------
+
+    def on_submit(self, rid, prompt_len: int):
+        if rid is WARMUP_RID:
+            return
+        rec = self.requests.get(rid)
+        if rec is None:
+            cls = rid.split("/")[1] if (isinstance(rid, str)
+                                        and rid.count("/") >= 2) else ""
+            self.requests[rid] = _ReqRecord(cls, prompt_len, self.clock())
+        else:
+            # re-submit after suspend/preempt: the request restarts from
+            # scratch but its clock does NOT — the requeue penalty is
+            # the SLO story, so t_submit stays and first/finish clear
+            rec.restarts += 1
+            rec.t_first = rec.t_finish = None
+            rec.n_tokens = 0
+
+    def on_first_token(self, rid):
+        rec = self.requests.get(rid)
+        if rec is not None and rec.t_first is None:
+            rec.t_first = self.clock()
+
+    def on_finish(self, rid, n_tokens: int):
+        rec = self.requests.get(rid)
+        if rec is not None:
+            rec.t_finish = self.clock()
+            rec.n_tokens = n_tokens
+
+    def on_preempt(self, rid, kind: str):
+        self.preemptions += 1
+        rec = self.requests.get(rid)
+        if rec is not None:
+            rec.restarts += 1
+            rec.t_first = rec.t_finish = None
+            rec.n_tokens = 0
+
+    def on_suspend(self, rids: Sequence):
+        """One drain+snapshot event; ``rids`` are the mid-generation
+        requests losing their work — they restart from scratch on
+        resume, so their first-token clocks reset (TTFT keeps measuring
+        from the ORIGINAL submit, same as preemption)."""
+        self.suspends += 1
+        for rid in rids:
+            rec = self.requests.get(rid)
+            if rec is not None:
+                rec.restarts += 1
+                rec.t_first = rec.t_finish = None
+                rec.n_tokens = 0
+
+    # -- per-tick recorder -------------------------------------------------
+
+    def on_step(self, engine):
+        now = self.clock()
+        dt = 0.0 if self._t_last is None else now - self._t_last
+        self._t_last = now
+        kind = "verify" if engine.spec_k > 0 else "decode"
+        d_tokens = engine.tokens_generated - self._tokens_last
+        self._tokens_last = engine.tokens_generated
+        d_steps = engine.decode_steps - self._steps_last
+        self._steps_last = engine.decode_steps
+        alloc = engine.cache.allocator
+        self.steps.append(StepEvent(
+            t=now, dt=dt, kind=kind, tokens=max(d_tokens, 0),
+            queue_depth=engine.queue_depth, active=engine.num_active,
+            pages_in_use=alloc.pages_in_use,
+            pages_in_limbo=alloc.pages_in_limbo,
+            wire_bytes=self.wire_bytes_per_step.get(kind, 0.0) * d_steps))
+
+    # -- reductions --------------------------------------------------------
+
+    def _finished(self) -> List[_ReqRecord]:
+        return [r for r in self.requests.values()
+                if r.t_finish is not None and r.t_first is not None]
+
+    def report(self) -> dict:
+        """Structured SLO report (the per-codec payload of BENCH JSON)."""
+        fin = self._finished()
+        t = self.targets
+        ttft = [(r.t_first - r.t_submit) * 1e3 for r in fin]
+        tpot = [(r.t_finish - r.t_first) / (r.n_tokens - 1) * 1e3
+                for r in fin if r.n_tokens > 1]
+        ok_ttft = [r for r in fin
+                   if (r.t_first - r.t_submit) * 1e3 <= t.ttft_ms]
+        ok_tpot = [r for r in fin if r.n_tokens <= 1
+                   or (r.t_finish - r.t_first) / (r.n_tokens - 1) * 1e3
+                   <= t.tpot_ms]
+        tpot_ids = {id(r) for r in ok_tpot}
+        ok_both = [r for r in ok_ttft if id(r) in tpot_ids]
+        n = max(len(fin), 1)
+        steps = [s for s in self.steps if s.dt > 0]
+        tokens = sum(r.n_tokens for r in fin)
+        span = (self.steps[-1].t - self.steps[0].t
+                if len(self.steps) > 1 else 0.0)
+        return {
+            "requests": {
+                "submitted": len(self.requests),
+                "finished": len(fin),
+                "restarts": sum(r.restarts for r in self.requests.values()),
+            },
+            "tokens_per_s": tokens / span if span > 0 else 0.0,
+            "ttft_ms": percentiles(ttft),
+            "tpot_ms": percentiles(tpot),
+            "step_us": percentiles([s.dt * 1e6 for s in steps]),
+            "queue_depth": {
+                "mean": float(np.mean([s.queue_depth for s in self.steps]))
+                if self.steps else 0.0,
+                "max": max((s.queue_depth for s in self.steps), default=0),
+            },
+            "pool": {
+                "peak_pages_in_use": max((s.pages_in_use
+                                          for s in self.steps), default=0),
+                "peak_pages_in_limbo": max((s.pages_in_limbo
+                                            for s in self.steps), default=0),
+            },
+            "slo": {
+                "ttft_target_ms": t.ttft_ms,
+                "tpot_target_ms": t.tpot_ms,
+                "ttft_attainment": len(ok_ttft) / n,
+                "tpot_attainment": len(ok_tpot) / n,
+                "attainment": len(ok_both) / n,
+            },
+            "faults": {
+                "preemptions": self.preemptions,
+                "suspends": self.suspends,
+            },
+        }
+
+    def per_class_report(self) -> dict:
+        """TTFT/TPOT percentiles split by request class (multi-tenant
+        traces encode the class in the rid: ``t<seed>/<class>/<idx>``)."""
+        out: dict = {}
+        for cls in sorted({r.cls for r in self._finished()}):
+            sub = [r for r in self._finished() if r.cls == cls]
+            out[cls] = {
+                "finished": len(sub),
+                "ttft_ms": percentiles(
+                    [(r.t_first - r.t_submit) * 1e3 for r in sub]),
+                "tpot_ms": percentiles(
+                    [(r.t_finish - r.t_first) / (r.n_tokens - 1) * 1e3
+                     for r in sub if r.n_tokens > 1]),
+            }
+        return out
+
+    # -- step-trace export (NoC co-simulation bridge) ----------------------
+
+    def step_trace(self) -> List[dict]:
+        """Per-tick records for ``--trace-out`` / the NoC bridge:
+        each dict carries the fields ``emio_cost_from_trace`` consumes
+        (``wire_bytes``, ``tokens``) plus scheduling context."""
+        return [{"t": s.t, "dt_us": s.dt * 1e6, "kind": s.kind,
+                 "tokens": s.tokens, "queue_depth": s.queue_depth,
+                 "active": s.active, "pages_in_use": s.pages_in_use,
+                 "pages_in_limbo": s.pages_in_limbo,
+                 "wire_bytes": s.wire_bytes}
+                for s in self.steps]
+
+    def write_trace(self, path: str):
+        """Write the step trace as JSON lines (one tick per line)."""
+        with open(path, "w") as f:
+            for rec in self.step_trace():
+                f.write(json.dumps(rec) + "\n")
+
+
+def load_trace(path: str) -> List[dict]:
+    """Read a ``write_trace`` JSONL file back (the NoC bridge's input)."""
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded per-tick fault probabilities (at most one fault per tick).
+
+    The draws come from one ``RandomState(seed)`` consumed once per
+    tick, so a plan replayed over the same deterministic schedule
+    injects the same faults at the same ticks — which is what lets the
+    fault fuzz assert bit-identical greedy streams.
+    """
+
+    seed: int = 0
+    p_preempt: float = 0.0           # evict + re-queue the youngest slot
+    p_replica_loss: float = 0.0      # evict + re-queue a random slot
+    p_suspend: float = 0.0           # drain + snapshot + resume
+    max_faults: int = 1 << 30
+
+    def __post_init__(self):
+        if self.p_preempt + self.p_replica_loss + self.p_suspend > 1.0:
+            raise ValueError("fault probabilities must sum to <= 1")
+
+
+class FaultInjector:
+    """Drives a ``FaultPlan`` against an engine, one roll per tick."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.rng = np.random.RandomState(plan.seed)
+        self.injected = {"preempt": 0, "replica_loss": 0, "suspend": 0}
+
+    @property
+    def total_injected(self) -> int:
+        return sum(self.injected.values())
+
+    def on_step(self, engine):
+        p = self.plan
+        # ALWAYS consume the same number of draws per tick, whether or
+        # not a fault lands — keeps the fault schedule a pure function
+        # of the tick index, independent of engine state
+        u, pick = self.rng.rand(), self.rng.rand()
+        if self.total_injected >= p.max_faults:
+            return
+        if u >= p.p_preempt + p.p_replica_loss + p.p_suspend:
+            return
+        active = engine.active_slots()
+        if u < p.p_preempt:
+            if len(active) >= 1:
+                engine.preempt_slot(active[-1], kind="injected_preempt")
+                self.injected["preempt"] += 1
+        elif u < p.p_preempt + p.p_replica_loss:
+            if len(active) >= 1:
+                slot = active[int(pick * len(active)) % len(active)]
+                engine.preempt_slot(slot, kind="replica_loss")
+                self.injected["replica_loss"] += 1
+        else:
+            if len(active) >= 1 or engine.queue_depth:
+                engine.resume(engine.suspend())
+                self.injected["suspend"] += 1
+
+
+# ---------------------------------------------------------------------------
+# BENCH_serve.json: the in-repo perf-trajectory artifact
+# ---------------------------------------------------------------------------
+
+_PCTL_KEYS = ("p50", "p95", "p99")
+
+
+def make_bench_payload(run: dict, results: Dict[str, dict],
+                       created: Optional[str] = None) -> dict:
+    """Assemble (and validate) a ``bench_serve/v1`` payload.
+
+    ``run`` is the full engine/workload configuration; ``results`` maps
+    codec name -> per-codec result dict — ``tokens_per_s``, ``step_us``
+    / ``ttft_ms`` / ``tpot_ms`` percentile dicts, ``wire_kb_per_tok``,
+    an ``slo`` block with targets + attainment, and a ``faults`` block
+    (an ``SLOMonitor.report()`` plus ``wire_kb_per_tok`` satisfies it).
+    """
+    payload = {"schema": BENCH_SCHEMA, "run": dict(run),
+               "results": results}
+    if created is not None:
+        payload["created"] = created
+    validate_bench(payload)
+    return payload
+
+
+def _need(obj: dict, key: str, where: str, typ=None):
+    if not isinstance(obj, dict) or key not in obj:
+        raise ValueError(f"BENCH schema: missing {where}.{key}")
+    v = obj[key]
+    if typ is not None and not isinstance(v, typ):
+        raise ValueError(
+            f"BENCH schema: {where}.{key} must be {typ}, got {type(v)}")
+    return v
+
+
+def _need_pctl(obj: dict, key: str, where: str):
+    d = _need(obj, key, where, dict)
+    for p in _PCTL_KEYS:
+        _need(d, p, f"{where}.{key}", (int, float))
+    return d
+
+
+def validate_bench(payload: dict):
+    """Raise ``ValueError`` unless ``payload`` is a valid bench_serve/v1
+    document.  CI's bench-smoke lane runs this against the emitted
+    ``BENCH_serve.json`` so a schema regression fails the build."""
+    if _need(payload, "schema", "payload", str) != BENCH_SCHEMA:
+        raise ValueError(
+            f"BENCH schema: expected {BENCH_SCHEMA!r}, "
+            f"got {payload['schema']!r}")
+    run = _need(payload, "run", "payload", dict)
+    if not run:
+        raise ValueError("BENCH schema: run config must be non-empty")
+    results = _need(payload, "results", "payload", dict)
+    if not results:
+        raise ValueError("BENCH schema: results must be non-empty")
+    for codec, res in results.items():
+        w = f"results[{codec}]"
+        _need(res, "tokens_per_s", w, (int, float))
+        _need(res, "wire_kb_per_tok", w, (int, float))
+        for blk in ("step_us", "ttft_ms", "tpot_ms"):
+            _need_pctl(res, blk, w)
+        slo = _need(res, "slo", w, dict)
+        for k in ("ttft_target_ms", "tpot_target_ms", "attainment"):
+            v = _need(slo, k, f"{w}.slo", (int, float))
+            if k == "attainment" and not 0.0 <= v <= 1.0:
+                raise ValueError(
+                    f"BENCH schema: {w}.slo.attainment {v} not in [0,1]")
+        faults = _need(res, "faults", w, dict)
+        _need(faults, "preemptions", f"{w}.faults", int)
+
+
+def write_bench(path: str, payload: dict):
+    """Validate then write ``BENCH_serve.json`` (pretty, stable keys)."""
+    validate_bench(payload)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_bench(path: str) -> dict:
+    """Read + validate a ``BENCH_serve.json``; the CI gate."""
+    with open(path) as f:
+        payload = json.load(f)
+    validate_bench(payload)
+    return payload

@@ -304,3 +304,45 @@ PAPER_MODELS = {
     "msresnet18": msresnet18_layers,
     "efficientnet-b4": efficientnet_b4_layers,
 }
+
+
+# ---------------------------------------------------------------------------
+# serving-trace -> NoC co-simulation bridge
+# ---------------------------------------------------------------------------
+
+
+def emio_cost_from_trace(steps: Sequence[dict],
+                         cfg: NocConfig | None = None) -> dict:
+    """Price a serving engine's per-step wire-bytes trace on the EMIO.
+
+    ``steps`` is the record list an ``SLOMonitor`` step trace exports
+    (``slo.load_trace`` / ``SLOMonitor.step_trace()``): each dict needs
+    ``wire_bytes`` — the total die-to-die bytes the tick's device step
+    moved, from the compiled step's parsed collectives — and ``tokens``
+    (committed that tick).  Every byte on the coded wire is one 8-bit
+    boundary packet, so a step's serialization cost follows eq (8) —
+    ``floor(pb / nc) * cycles_ser + pb`` over the ``nc`` peripheral
+    serdes ports — and its energy is ``pb * e_d2d`` (224x a router hop,
+    §4.4).  The returned per-token numbers are the co-simulation
+    headline: what the measured serving workload, not a synthetic
+    layer sweep, pays at the die boundary per generated token.
+    """
+    cfg = cfg or NocConfig()
+    nc = max(1, cfg.boundary_cores)
+    cycles = energy = 0.0
+    tokens = 0
+    for s in steps:
+        pb = float(s.get("wire_bytes", 0.0))
+        if pb > 0:
+            cycles += math.floor(pb / nc) * cfg.cycles_ser + pb
+            energy += pb * cfg.e_d2d
+        tokens += int(s.get("tokens", 0))
+    return {
+        "steps": len(steps),
+        "tokens": tokens,
+        "emio_cycles": cycles,
+        "emio_s": cycles / cfg.freq_hz,
+        "e_emio": energy,
+        "emio_cycles_per_token": cycles / max(tokens, 1),
+        "e_emio_per_token": energy / max(tokens, 1),
+    }

@@ -245,23 +245,28 @@ def test_page_allocator_group_partitioning():
 
 @pytest.mark.slow
 @settings(max_examples=60, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 40)),
+@given(st.lists(st.tuples(st.integers(0, 6), st.integers(1, 40)),
                 min_size=1, max_size=60),
        st.integers(1, 3))
 def test_fuzz_page_allocator_never_leaks_or_double_maps(ops, groups):
     """Hypothesis fuzz of the page allocator: ANY alloc/ensure/rollback/
-    free sequence — interleaved with note_dispatch/note_commit epoch
-    marks, so frees land in the deferred-free limbo whenever a step is
-    "in flight" — keeps (a) every page mapped at most once, (b) live
-    slots' block-table rows disjoint and exactly mirroring the mapping,
-    (c) free + mapped + limbo == num_pages, (d) failed ops
-    state-neutral, (e) limbo empty whenever no step is outstanding."""
+    free/preempt sequence — interleaved with note_dispatch/note_commit
+    epoch marks, so frees land in the deferred-free limbo whenever a
+    step is "in flight" — keeps (a) every page mapped at most once, (b)
+    live slots' block-table rows disjoint and exactly mirroring the
+    mapping, (c) free + mapped + limbo == num_pages, (d) failed ops
+    state-neutral, (e) limbo empty whenever no step is outstanding.
+    The preempt op (6) frees the YOUNGEST live slot mid-epoch — the
+    allocator-level footprint of the engine's pool-pressure preemption
+    — and must be page-clean like any other free."""
     from repro.serving import SlotAllocator
     from repro.serving.errors import (CacheOverflowError,
                                       PagePoolExhausted, SlotsExhausted)
     a = SlotAllocator(num_slots=3 * groups, max_seq=32, page_size=8,
                       num_pages=6 * groups, num_groups=groups)
     live = {}                            # slot -> len
+    order = []                           # admission order (preempt victim
+    #                                      selection is youngest-first)
 
     def check():
         mapped = []
@@ -290,6 +295,7 @@ def test_fuzz_page_allocator_never_leaks_or_double_maps(ops, groups):
             if op == 0:
                 s = a.alloc(min(arg, 32))
                 live[s] = min(arg, 32)
+                order.append(s)
             elif op == 1 and live:
                 s = sorted(live)[arg % len(live)]
                 a.ensure(s, live[s] + arg)
@@ -303,10 +309,16 @@ def test_fuzz_page_allocator_never_leaks_or_double_maps(ops, groups):
                 s = sorted(live)[arg % len(live)]
                 a.free(s)
                 del live[s]
+                order.remove(s)
             elif op == 4 and a._dispatched - a._committed < 2:
                 a.note_dispatch()        # a step starts: frees now defer
             elif op == 5 and a._dispatched > a._committed:
                 a.note_commit()          # oldest step joins: limbo drains
+            elif op == 6 and live:
+                s = order[-1]            # preempt: evict the youngest
+                a.free(s)                # (its pages limbo mid-epoch)
+                del live[s]
+                order.pop()
         except (SlotsExhausted, PagePoolExhausted, CacheOverflowError):
             pass                         # typed refusals must not mutate
         check()

@@ -70,3 +70,30 @@ def test_energy_nonnegative_and_monotone_in_macs(n_in, n_out):
     r1 = NocSim(cfg).simulate([fc("a", n_in, n_out)])
     r2 = NocSim(cfg).simulate([fc("a", n_in, 2 * n_out)])
     assert 0 < r1.total_energy <= r2.total_energy
+
+
+def test_emio_cost_from_trace_eq8():
+    """The serving-trace bridge prices each step's wire bytes exactly on
+    eq (8): floor(pb/nc)*cycles_ser + pb cycles, pb*e_d2d energy, with
+    zero-byte and missing-field steps free."""
+    from repro.sim.noc import emio_cost_from_trace
+
+    cfg = NocConfig()
+    nc = cfg.boundary_cores
+    steps = [{"wire_bytes": 1000.0, "tokens": 4},
+             {"wire_bytes": 0.0, "tokens": 2},
+             {"tokens": 1},                       # no wire field: free
+             {"wire_bytes": 7.0, "tokens": 1}]
+    out = emio_cost_from_trace(steps, cfg)
+    want_cycles = (math.floor(1000.0 / nc) * cfg.cycles_ser + 1000.0
+                   + math.floor(7.0 / nc) * cfg.cycles_ser + 7.0)
+    want_energy = (1000.0 + 7.0) * cfg.e_d2d
+    assert out["steps"] == 4 and out["tokens"] == 8
+    assert out["emio_cycles"] == pytest.approx(want_cycles)
+    assert out["e_emio"] == pytest.approx(want_energy)
+    assert out["emio_s"] == pytest.approx(want_cycles / cfg.freq_hz)
+    assert out["emio_cycles_per_token"] == pytest.approx(want_cycles / 8)
+    assert out["e_emio_per_token"] == pytest.approx(want_energy / 8)
+    # an empty trace must not divide by zero
+    empty = emio_cost_from_trace([], cfg)
+    assert empty["tokens"] == 0 and empty["emio_cycles_per_token"] == 0.0

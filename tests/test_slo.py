@@ -1,0 +1,297 @@
+"""Host-side SLO harness tests: trace generator determinism, monitor
+math under an injectable fake clock, the BENCH_serve.json schema gate,
+and the step-trace -> NoC bridge files.
+
+Everything here is pure host code — no engine, no jit — so the whole
+file runs in milliseconds and belongs to the tier-1 fast lane.  The
+engine-in-the-loop counterparts (fault identity, drain cleanliness)
+live in tests/test_faults.py.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving import (FaultPlan, PRESETS, RequestClass, SLOMonitor,
+                           SLOTargets, load_bench, make_bench_payload,
+                           make_trace, preset_trace, validate_bench,
+                           write_bench, zoo_mix)
+from repro.serving.slo import load_trace, percentiles
+
+
+# ---------------------------------------------------------------------------
+# workload traces
+# ---------------------------------------------------------------------------
+
+
+def test_trace_seed_determinism():
+    """Same seed -> identical trace (arrivals, prompts, budgets);
+    different seed -> a different stream."""
+    a = preset_trace("multitenant", 4.0, seed=7)
+    b = preset_trace("multitenant", 4.0, seed=7)
+    c = preset_trace("multitenant", 4.0, seed=8)
+    assert a.requests == b.requests
+    assert len(a) > 0
+    assert a.requests != c.requests
+
+
+def test_trace_sorted_and_budget_clamped():
+    tr = preset_trace("longtail", 6.0, seed=1, prefill_len=12, max_gen=5)
+    times = [r.t for r in tr.requests]
+    assert times == sorted(times)
+    for r in tr.requests:
+        assert 0.0 <= r.t < tr.horizon_s
+        assert 1 <= len(r.req.prompt) <= 12
+        assert 1 <= r.req.max_new_tokens <= 5
+        assert r.req.rid.split("/")[1] == r.cls
+
+
+def test_trace_class_independence():
+    """Adding a tenant never perturbs the existing tenants' streams
+    (each class draws from its own derived seed)."""
+    base = zoo_mix()
+    small = make_trace(base[:2], 4.0, seed=3)
+    full = make_trace(base, 4.0, seed=3)
+    keep = {c.name for c in base[:2]}
+    assert [r for r in full.requests if r.cls in keep] == list(small.requests)
+
+
+def test_trace_fixed_prompt_len():
+    tr = preset_trace("steady", 2.0, seed=0, fixed_prompt_len=9)
+    assert tr.requests and all(len(r.req.prompt) == 9 for r in tr.requests)
+
+
+def test_trace_validation_errors():
+    with pytest.raises(ValueError):
+        preset_trace("no-such-preset", 1.0)
+    with pytest.raises(ValueError):
+        RequestClass("bad", rate=0.0)
+    with pytest.raises(ValueError):
+        RequestClass("bad", rate=1.0, arrival="uniform")
+    with pytest.raises(ValueError):
+        RequestClass("bad", rate=1.0, prompt_len=(5, 2))
+    with pytest.raises(ValueError):
+        make_trace([], 1.0)
+
+
+def test_presets_all_produce_arrivals():
+    for name in PRESETS:
+        assert len(preset_trace(name, 4.0, seed=0, load=8.0)) > 0, name
+
+
+# ---------------------------------------------------------------------------
+# monitor math (fake clock, stub engine)
+# ---------------------------------------------------------------------------
+
+
+class _Clock:
+    """Injectable monotonic clock: ``clk.t = ...`` then the monitor
+    reads exactly that."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class _StubAlloc:
+    pages_in_use = 3
+    pages_in_limbo = 1
+
+
+class _StubCache:
+    allocator = _StubAlloc()
+
+
+class _StubEngine:
+    spec_k = 0
+    cache = _StubCache()
+
+    def __init__(self):
+        self.tokens_generated = 0
+        self.decode_steps = 0
+        self.queue_depth = 0
+        self.num_active = 1
+
+
+def test_percentiles_empty_and_known():
+    assert percentiles([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0,
+                               "mean": 0.0, "n": 0}
+    p = percentiles(range(1, 101))
+    assert p["n"] == 100 and p["mean"] == 50.5
+    assert p["p50"] == pytest.approx(50.5)
+    assert p["p99"] == pytest.approx(np.percentile(range(1, 101), 99))
+
+
+def test_monitor_ttft_tpot_attainment_math():
+    """Hand-driven lifecycle on a fake clock: TTFT/TPOT come out exact,
+    and attainment judges each request against the targets."""
+    clk = _Clock()
+    mon = SLOMonitor(targets=SLOTargets(ttft_ms=100.0, tpot_ms=10.0),
+                     clock=clk)
+    # r0: TTFT 50ms (ok), 5 tokens over 20ms -> TPOT 5ms (ok)
+    mon.on_submit("r0", 8)
+    clk.t = 0.050
+    mon.on_first_token("r0")
+    clk.t = 0.070
+    mon.on_finish("r0", 5)
+    # r1: TTFT 200ms (violates), 3 tokens at 4ms/tok (ok)
+    clk.t = 0.0
+    mon.on_submit("r1", 4)
+    clk.t = 0.200
+    mon.on_first_token("r1")
+    clk.t = 0.208
+    mon.on_finish("r1", 3)
+    rep = mon.report()
+    assert rep["requests"] == {"submitted": 2, "finished": 2, "restarts": 0}
+    assert rep["ttft_ms"]["p50"] == pytest.approx(125.0)
+    assert rep["ttft_ms"]["mean"] == pytest.approx(125.0)
+    assert rep["tpot_ms"]["n"] == 2
+    assert rep["tpot_ms"]["mean"] == pytest.approx((5.0 + 4.0) / 2)
+    slo = rep["slo"]
+    assert slo["ttft_attainment"] == 0.5
+    assert slo["tpot_attainment"] == 1.0
+    assert slo["attainment"] == 0.5
+
+
+def test_monitor_restart_keeps_original_submit_clock():
+    """A preempted request restarts from scratch but its TTFT keeps
+    measuring from the ORIGINAL submit — the re-queue penalty is the
+    SLO story."""
+    clk = _Clock()
+    mon = SLOMonitor(clock=clk)
+    mon.on_submit("r0", 8)
+    clk.t = 0.010
+    mon.on_first_token("r0")
+    clk.t = 0.020
+    mon.on_preempt("r0", "pool_pressure")
+    mon.on_submit("r0", 8)             # engine re-admits from the queue
+    clk.t = 0.300
+    mon.on_first_token("r0")
+    clk.t = 0.350
+    mon.on_finish("r0", 4)
+    rep = mon.report()
+    assert rep["requests"]["restarts"] == 2   # preempt + resubmit
+    assert rep["faults"]["preemptions"] == 1
+    assert rep["ttft_ms"]["mean"] == pytest.approx(300.0)
+
+
+def test_monitor_suspend_resets_inflight_records():
+    clk = _Clock()
+    mon = SLOMonitor(clock=clk)
+    mon.on_submit("a", 4)
+    mon.on_submit("b", 4)
+    clk.t = 0.010
+    mon.on_first_token("a")
+    mon.on_suspend(["a"])              # b was still queued: untouched
+    assert mon.suspends == 1
+    assert mon.requests["a"].t_first is None
+    assert mon.requests["a"].restarts == 1
+    assert mon.requests["b"].restarts == 0
+    clk.t = 0.050
+    mon.on_first_token("a")            # re-measures after the restart
+    assert mon.requests["a"].t_first == pytest.approx(0.050)
+
+
+def test_monitor_step_trace_and_wire_bytes():
+    """on_step snapshots queue/pool state and prices wire bytes per
+    DEVICE step (a tick that commits two async steps carries 2x)."""
+    clk = _Clock()
+    eng = _StubEngine()
+    mon = SLOMonitor(wire_bytes_per_step={"decode": 100.0}, clock=clk)
+    eng.decode_steps, eng.tokens_generated, eng.queue_depth = 1, 3, 5
+    mon.on_step(eng)
+    clk.t = 0.001
+    eng.decode_steps, eng.tokens_generated = 3, 9   # 2 steps this tick
+    mon.on_step(eng)
+    trace = mon.step_trace()
+    assert [s["wire_bytes"] for s in trace] == [100.0, 200.0]
+    assert [s["tokens"] for s in trace] == [3, 6]
+    assert trace[1]["dt_us"] == pytest.approx(1000.0)
+    assert trace[0]["queue_depth"] == 5
+    assert trace[0]["pages_in_use"] == 3
+    rep = mon.report()
+    assert rep["queue_depth"]["max"] == 5
+    assert rep["pool"]["peak_pages_in_limbo"] == 1
+
+
+def test_write_trace_roundtrip(tmp_path):
+    clk = _Clock()
+    mon = SLOMonitor(wire_bytes_per_step={"decode": 64.0}, clock=clk)
+    eng = _StubEngine()
+    for i in range(3):
+        clk.t = i * 0.002
+        eng.decode_steps, eng.tokens_generated = i + 1, (i + 1) * 2
+        mon.on_step(eng)
+    path = tmp_path / "steps.jsonl"
+    mon.write_trace(str(path))
+    back = load_trace(str(path))
+    assert back == mon.step_trace()
+
+
+# ---------------------------------------------------------------------------
+# fault plan validation
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_probability_sum_validated():
+    FaultPlan(p_preempt=0.5, p_replica_loss=0.3, p_suspend=0.2)
+    with pytest.raises(ValueError):
+        FaultPlan(p_preempt=0.6, p_replica_loss=0.3, p_suspend=0.2)
+
+
+# ---------------------------------------------------------------------------
+# BENCH_serve.json schema
+# ---------------------------------------------------------------------------
+
+
+def _result():
+    pctl = {"p50": 1.0, "p95": 2.0, "p99": 3.0, "mean": 1.5, "n": 4}
+    return {"tokens_per_s": 100.0, "wire_kb_per_tok": 1.5,
+            "step_us": dict(pctl), "ttft_ms": dict(pctl),
+            "tpot_ms": dict(pctl),
+            "slo": {"ttft_target_ms": 500.0, "tpot_target_ms": 100.0,
+                    "ttft_attainment": 1.0, "tpot_attainment": 1.0,
+                    "attainment": 1.0},
+            "faults": {"preemptions": 0, "suspends": 0}}
+
+
+def test_bench_payload_roundtrip(tmp_path):
+    payload = make_bench_payload({"bench": "t", "mesh": "1x1"},
+                                 {"spike_fused": _result()})
+    path = tmp_path / "BENCH_serve.json"
+    write_bench(str(path), payload)
+    assert load_bench(str(path)) == payload
+    # stable output: keys sorted, trailing newline
+    text = path.read_text()
+    assert text.endswith("\n")
+    assert json.loads(text) == payload
+
+
+def test_bench_schema_rejects_bad_payloads(tmp_path):
+    good = make_bench_payload({"bench": "t"}, {"none": _result()})
+    with pytest.raises(ValueError):
+        validate_bench({**good, "schema": "bench_serve/v0"})
+    with pytest.raises(ValueError):
+        validate_bench({**good, "run": {}})
+    with pytest.raises(ValueError):
+        validate_bench({**good, "results": {}})
+    r = _result()
+    del r["ttft_ms"]["p99"]
+    with pytest.raises(ValueError):
+        validate_bench({**good, "results": {"none": r}})
+    r = _result()
+    r["slo"]["attainment"] = 1.5
+    with pytest.raises(ValueError):
+        validate_bench({**good, "results": {"none": r}})
+    r = _result()
+    del r["faults"]
+    with pytest.raises(ValueError):
+        validate_bench({**good, "results": {"none": r}})
+    # load_bench is the CI gate: a corrupt file on disk must raise too
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": "bench_serve/v1", "run": {"x": 1},
+                               "results": {"none": {}}}))
+    with pytest.raises(ValueError):
+        load_bench(str(bad))
