@@ -30,6 +30,15 @@ is a distribution shift the mean alone would hide, so it is measured,
 not claimed.  Wire bytes per token are codec-determined and must not
 move with the depth.
 
+``--attn-kernel`` picks the paged decode/verify attention path —
+``fused`` (default; the Pallas gather->flash->combine kernel over the
+allocator's compacted per-shard page lists) or ``reference`` (dense
+block-table gather + ``verify_attention_partial``) — or sweeps a comma
+list of both.  A sweep shares one param init per codec, so the two
+paths must emit identical greedy tokens (asserted) and the report
+isolates the kernel's step-latency delta at identical wire bytes/token;
+results are then keyed ``<codec>/<kernel>``.
+
 With ``--out BENCH_serve.json`` the same run also emits the structured
 perf-trajectory artifact (schema ``bench_serve/v1``, see
 ``repro.serving.slo``): per-codec tokens/s, stepus/TTFT/TPOT
@@ -74,6 +83,14 @@ def main():
     ap.add_argument("--async-depth", type=int, default=0,
                     help="decode steps the host dispatches ahead of the "
                          "oldest un-synced step (0: synchronous loop)")
+    ap.add_argument("--attn-kernel", default="fused",
+                    help="paged decode/verify attention path: 'fused' "
+                         "(Pallas kernel over compacted per-shard page "
+                         "lists), 'reference' (dense gather), or a "
+                         "comma list to sweep both — results are then "
+                         "keyed <codec>/<kernel> so the fused-vs-"
+                         "reference step-latency delta lands in one "
+                         "BENCH_serve.json")
     ap.add_argument("--repetitive", action="store_true",
                     help="cyclic prompts (the drafter's best case)")
     ap.add_argument("--out", default="",
@@ -114,20 +131,30 @@ def main():
     baseline_tokens = None
     bench_results = {}
     codecs = args.codecs.split(",")
-    for codec in codecs:
-        hnn = "ann" if codec == "none" else "hnn"
-        cfg = reduced(get_config(args.arch, hnn_mode=hnn)).replace(
-            codec=codec)
+    kernels = args.attn_kernel.split(",")
+    pairs = [(c, k) for c in codecs for k in kernels]
+    models = {}
+    for codec, kernel in pairs:
+        key = codec if len(kernels) == 1 else f"{codec}/{kernel}"
+        if codec not in models:
+            hnn = "ann" if codec == "none" else "hnn"
+            cfg = reduced(get_config(args.arch, hnn_mode=hnn)).replace(
+                codec=codec)
+            cell = ShapeCell("serve_decode", max_seq, args.slots, "decode")
+            plan = SP.make_plan(cfg, cell, mesh)
+            # one param init shared across the kernel sweep: the two
+            # attention paths must generate identical tokens, so only
+            # step latency may move between them
+            models[codec] = (cfg, TR.init_sharded_params(
+                cfg, plan, mesh, jax.random.PRNGKey(0)))
+        cfg, params = models[codec]
         ecfg = EngineConfig(num_slots=args.slots, max_seq=max_seq,
                             prefill_len=args.prompt_len,
                             page_size=args.page_size,
                             num_pages=args.num_pages,
                             spec_k=args.spec_k,
-                            async_depth=args.async_depth)
-        cell = ShapeCell("serve_decode", max_seq, args.slots, "decode")
-        plan = SP.make_plan(cfg, cell, mesh)
-        params = TR.init_sharded_params(cfg, plan, mesh,
-                                        jax.random.PRNGKey(0))
+                            async_depth=args.async_depth,
+                            attn_kernel=kernel)
         reqs = [Request(rid=i, prompt=p, max_new_tokens=args.gen)
                 for i, p in enumerate(prompts)]
 
@@ -165,8 +192,8 @@ def main():
         if baseline_tokens is None:
             baseline_tokens = toks
         assert toks == baseline_tokens, (
-            f"codec {codec} generated {toks} != {baseline_tokens} tokens; "
-            "us_per_token not comparable across codecs")
+            f"{key} generated {toks} != {baseline_tokens} tokens; "
+            "us_per_token not comparable across codecs/kernels")
         us_per_tok = dt / toks * 1e6
         ps = engine.pool_stats()
         extra = ""
@@ -176,7 +203,7 @@ def main():
             extra = (f" spec_k={engine.spec_k} accepted={mal:.2f} "
                      f"vwireKB/tok={vper_tok/1e3:.2f}")
         peak_kb = ps["peak_pages_in_use"] * engine.cache.kv_page_bytes()
-        print(f"serve/{codec},{us_per_tok:.1f},"
+        print(f"serve/{key},{us_per_tok:.1f},"
               f"tok/s={toks/dt:.1f} wireKB/tok={per_tok/1e3:.2f} "
               f"steps={engine.decode_steps} slots={args.slots} "
               f"depth={args.async_depth} "
@@ -186,14 +213,15 @@ def main():
               f"kvKBdense={ps['kv_bytes_dense']/1e3:.1f}{extra}")
         rep = monitor.report()
         rep["wire_kb_per_tok"] = per_tok / 1e3
-        bench_results[codec] = rep
+        bench_results[key] = rep
         if args.trace_out:
             path = args.trace_out
-            if len(codecs) > 1:
+            if len(pairs) > 1:
+                tag = key.replace("/", "-")
                 stem, dot, ext = path.rpartition(".")
-                path = f"{stem}.{codec}.{ext}" if dot else f"{path}.{codec}"
+                path = f"{stem}.{tag}.{ext}" if dot else f"{path}.{tag}"
             monitor.write_trace(path)
-            print(f"# step trace ({codec}): {path}", file=sys.stderr)
+            print(f"# step trace ({key}): {path}", file=sys.stderr)
 
     if args.out:
         run_cfg = {
@@ -202,6 +230,7 @@ def main():
             "prompt_len": args.prompt_len, "gen": args.gen,
             "page_size": args.page_size, "num_pages": args.num_pages,
             "spec_k": args.spec_k, "async_depth": args.async_depth,
+            "attn_kernel": args.attn_kernel,
         }
         write_bench(args.out, make_bench_payload(run_cfg, bench_results))
         print(f"# BENCH_serve.json: {args.out}", file=sys.stderr)

@@ -381,6 +381,73 @@ def coded_psum(x, params, codec: BoundaryCodec, axis_name: Axis):
 
 
 # ---------------------------------------------------------------------------
+# decode-step head-space boundaries (q/kv gathers + attention combine)
+# ---------------------------------------------------------------------------
+#
+# The decode/verify attention step crosses the die boundary three more
+# times than the D-space activations above: the q/kv HEAD gathers before
+# the sharded flash partial, and the LSE-weighted combine of the
+# partials after it.  These tensors live in head space ([B, K1, H, dh])
+# where no learned spike params exist (theta/log_scale are per-channel
+# over D), so every coded mode uses the params-free per-token int8
+# absmax wire here — mode "none" stays plain fp.  The combine keeps the
+# LSE scalars ([B, K1, Hq] f32) uncoded: they are O(heads) scalars, the
+# one piece of decode-step traffic left at full precision.  Forward-only
+# (serving); batch independence holds because every scale reduces over
+# the channel axis only, never across slots.
+
+
+def coded_head_all_gather(x, codec: BoundaryCodec, axis_name: Axis,
+                          axis: int):
+    """Gather head-sharded q/k/v across ``axis_name``; int8 wire when
+    coded.  Scales ride the same gather (one per token x head), so each
+    segment is decoded with its source shard's scale."""
+    if codec.mode == "none":
+        return lax.all_gather(x, axis_name, axis=axis, tiled=True)
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True),
+                    1e-6) / 127.0
+    wire = jnp.round(x / s).astype(jnp.int8)
+    wire_g = lax.all_gather(wire, axis_name, axis=axis, tiled=True)
+    s_g = lax.all_gather(s, axis_name, axis=axis, tiled=True)
+    return (wire_g.astype(jnp.float32)
+            * s_g.astype(jnp.float32)).astype(x.dtype)
+
+
+def quantize_partial(o):
+    """Per-token int8 absmax quantization of a locally-normalized
+    attention partial ``[..., dh]`` -> ``(wire int8, scale f32)``.
+
+    Bit-identical to the fused kernel's epilogue
+    (``kernels.paged_decode``), so the reference gather path and the
+    fused path put the same bytes on the wire.
+    """
+    o = o.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(o), axis=-1, keepdims=True),
+                    1e-6) / 127.0
+    return jnp.round(o / s).astype(jnp.int8), s
+
+
+def coded_combine_partials(wire, scale, lse, axis_names: Axis, out_dtype):
+    """LSE-weighted combine of int8-coded decode partials.
+
+    The coded twin of ``models.common.combine_decode_partials``: each
+    shard contributes its epilogue-quantized partial (``wire``/``scale``
+    from the kernel or ``quantize_partial``) plus fp LSE; every rank
+    gathers the wire bytes, decodes locally, and performs the weighted
+    sum — spike-accumulation semantics, no fp partial on the wire.
+    """
+    wire_g = lax.all_gather(wire, axis_names, axis=0, tiled=False)
+    s_g = lax.all_gather(scale, axis_names, axis=0, tiled=False)
+    lse_g = lax.all_gather(lse, axis_names, axis=0, tiled=False)
+    m = jnp.max(lse_g, axis=0)
+    w = jnp.exp(lse_g - m)
+    dec = wire_g.astype(jnp.float32) * s_g.astype(jnp.float32)
+    o_sum = jnp.sum(dec * w[..., None], axis=0)
+    l_sum = jnp.sum(w, axis=0)
+    return (o_sum / jnp.maximum(l_sum[..., None], 1e-30)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
 # coded ppermute (pipeline-stage / pod-boundary sends)
 # ---------------------------------------------------------------------------
 

@@ -18,6 +18,7 @@ from . import ref
 from .count_matmul import count_matmul_pallas
 from .lif_encode import lif_encode_pallas
 from .pack4 import pack4_pallas, unpack4_pallas
+from .paged_decode import paged_decode_pallas
 
 
 def _on_tpu() -> bool:
@@ -92,4 +93,47 @@ def unpack4(packed: jax.Array, *, interpret: bool | None = None) -> jax.Array:
     return out[:m0, : C2 * 2]
 
 
-__all__ = ["lif_encode", "count_matmul", "pack4", "unpack4", "ref"]
+@partial(jax.jit,
+         static_argnames=("window", "cap", "encode_wire", "interpret"))
+def paged_flash_decode(q, k_pool, v_pool, cl_page, cl_pos, qpos, *,
+                       window: int = 0, cap: float = 0.0,
+                       encode_wire: bool = False,
+                       interpret: bool | None = None):
+    """Fused page-gather -> flash decode -> LSE partial over one shard.
+
+    q [B,K1,Hq,dh] x this shard's pool slice [P_loc,psz,Hkv,dh], walking
+    the slot's compacted page list (cl_page local rows / cl_pos absolute
+    start positions, [B,ppc], -1 = none).  Returns ``(o, lse)`` or, with
+    ``encode_wire``, the epilogue-quantized ``(wire, scale, lse)`` for
+    the coded cross-shard combine.  Grid is (B,) — no padding needed.
+
+    Dispatch: on TPU the Pallas kernel runs compiled.  Off-TPU the
+    default (``interpret=None``) runs the SAME compacted algorithm
+    through XLA via the ``ref.py`` oracle — the page-list compaction
+    (each shard visits ``ceil(pages/shards)`` pages, never the full
+    block-table width) is a backend-independent win, while the
+    in-kernel fusion (no gathered K/V intermediate in HBM, epilogue
+    quantize) only pays on a real accelerator and interpret-mode
+    Pallas would bury it in per-program overhead.  ``interpret=True``
+    forces the interpreted kernel body — the knob the kernel-vs-oracle
+    tests and the CI kernel lane use to validate the Pallas code path
+    on every pinned jax.
+    """
+    if interpret is None and not _on_tpu():
+        o, lse = ref.paged_decode_ref(q, k_pool, v_pool, cl_page, cl_pos,
+                                      qpos, window=window, cap=cap)
+        if not encode_wire:
+            return o, lse
+        # same per-token absmax int8 contract as the kernel epilogue
+        # and core.boundary.quantize_partial
+        s = jnp.maximum(jnp.max(jnp.abs(o), axis=-1, keepdims=True),
+                        1e-6) / 127.0
+        return jnp.round(o / s).astype(jnp.int8), s, lse
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return paged_decode_pallas(q, k_pool, v_pool, cl_page, cl_pos, qpos,
+                               window=window, cap=cap,
+                               encode_wire=encode_wire, interpret=interp)
+
+
+__all__ = ["lif_encode", "count_matmul", "pack4", "unpack4",
+           "paged_flash_decode", "ref"]

@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: fused paged-decode attention over compacted lists.
+
+One kernel instance per batch slot walks the slot's compacted per-shard
+page list (host-built by ``serving.kv_cache.SlotAllocator`` next to the
+block table) and fuses the three stages the reference path runs
+separately:
+
+    page gather -> online-softmax flash decode (K1 >= 1 query tokens,
+    covering both the decode K1=1 case and spec verify) -> locally
+    normalized partial + LSE for the cross-shard combine,
+
+optionally with the int8 wire encode of the attention output fused at
+the epilogue (the ``pack4.py`` / ``lif_encode.py`` idiom): the partial
+leaves the kernel already quantized for the coded die-to-die combine,
+so neither a ``[B, pages_per_slot*psz, Hkv, dh]`` gathered KV block nor
+an fp partial ever materializes in HBM.  Work per slot is
+``pages_per_shard = ceil(pages_per_slot / pool_shards)`` pages — the
+1/cp page-count reduction the dense layout had — instead of the full
+block table the reference gather scores and masks.
+
+Numerics: f32 throughout, same -1e30 masking sentinel and 1e-30
+normalizer floors as ``models.common.verify_attention_partial``.  The
+online per-page max/rescale reduction is mathematically identical to
+the reference's single-max softmax but associates differently, so
+results agree to fp epsilon, not bit-for-bit; greedy token-identity of
+the served stream is what the engine fuzz enforces.  A fully masked
+shard (no resident page at <= qpos) yields lse ~= -1e30 exactly like
+the reference, so its weight underflows to exactly 0 in the combine.
+
+Block layout: grid (B,); the pool shard [P_loc, psz, Hkv, dh] is
+resident for all programs; q / page-list / qpos tiles are per-slot rows.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _paged_decode_kernel(q_ref, k_ref, v_ref, clp_ref, clo_ref, qpos_ref,
+                         *out_refs, scale: float, window: int, cap: float,
+                         encode_wire: bool):
+    q = q_ref[0].astype(F32)                        # [K1, Hq, dh]
+    qpos = qpos_ref[0]                              # [K1]
+    K1, Hq, dh = q.shape
+    psz, Hkv = k_ref.shape[1], k_ref.shape[2]
+    g = Hq // Hkv
+    ppc = clp_ref.shape[1]
+
+    def page_step(c, carry):
+        m, l, acc = carry
+        row = clp_ref[0, c]
+        valid = row >= 0
+        safe = jnp.where(valid, row, 0)
+        sl = (pl.ds(safe, 1), slice(None), slice(None), slice(None))
+        k_pg = pl.load(k_ref, sl)[0].astype(F32)    # [psz, Hkv, dh]
+        v_pg = pl.load(v_ref, sl)[0].astype(F32)
+        if g > 1:
+            k_pg = jnp.repeat(k_pg, g, axis=1)      # [psz, Hq, dh]
+            v_pg = jnp.repeat(v_pg, g, axis=1)
+        s = jnp.einsum("qhd,khd->qhk", q, k_pg) * scale
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        k_pos = clo_ref[0, c] + jnp.arange(psz)
+        mask = valid & (k_pos[None, None, :] <= qpos[:, None, None])
+        if window:
+            mask &= (qpos[:, None, None] - k_pos[None, None, :]) < window
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = (acc * alpha[..., None]
+                   + jnp.einsum("qhk,khd->qhd", p, v_pg))
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((K1, Hq), -1e30, F32)
+    l0 = jnp.zeros((K1, Hq), F32)
+    a0 = jnp.zeros((K1, Hq, dh), F32)
+    m, l, acc = jax.lax.fori_loop(0, ppc, page_step, (m0, l0, a0))
+    o = acc / jnp.maximum(l[..., None], 1e-30)      # locally normalized
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    if encode_wire:
+        wire_ref, scale_ref, lse_ref = out_refs
+        s_q = jnp.maximum(jnp.max(jnp.abs(o), axis=-1, keepdims=True),
+                          1e-6) / 127.0
+        wire_ref[0] = jnp.round(o / s_q).astype(jnp.int8)
+        scale_ref[0] = s_q
+    else:
+        o_ref, lse_ref = out_refs
+        o_ref[0] = o
+    lse_ref[0] = lse
+
+
+def paged_decode_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        cl_page: jax.Array, cl_pos: jax.Array,
+                        qpos: jax.Array, *, window: int = 0,
+                        cap: float = 0.0, encode_wire: bool = False,
+                        interpret: bool = False):
+    """Fused gather->flash->partial over one pool shard.
+
+    q [B, K1, Hq, dh]; k_pool/v_pool [P_loc, psz, Hkv, dh] (this shard's
+    pool slice); cl_page [B, ppc] int32 shard-LOCAL page rows (-1 = no
+    page); cl_pos [B, ppc] int32 absolute position of each page's first
+    token; qpos [B, K1] int32 absolute per-query positions.
+
+    Returns ``(o [B,K1,Hq,dh] f32, lse [B,K1,Hq] f32)``, or with
+    ``encode_wire`` the epilogue-quantized partial ``(wire int8
+    [B,K1,Hq,dh], scale f32 [B,K1,Hq,1], lse)`` ready for the coded
+    cross-shard combine (``core.boundary.coded_combine_partials``).
+    """
+    B, K1, Hq, dh = q.shape
+    P_loc, psz, Hkv, _ = k_pool.shape
+    ppc = cl_page.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    pool_spec = pl.BlockSpec((P_loc, psz, Hkv, dh),
+                             lambda i: (0, 0, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, K1, Hq, dh), lambda i: (i, 0, 0, 0)),
+        pool_spec, pool_spec,
+        pl.BlockSpec((1, ppc), lambda i: (i, 0)),
+        pl.BlockSpec((1, ppc), lambda i: (i, 0)),
+        pl.BlockSpec((1, K1), lambda i: (i, 0)),
+    ]
+    lse_shape = jax.ShapeDtypeStruct((B, K1, Hq), F32)
+    lse_spec = pl.BlockSpec((1, K1, Hq), lambda i: (i, 0, 0))
+    if encode_wire:
+        out_shape = (jax.ShapeDtypeStruct((B, K1, Hq, dh), jnp.int8),
+                     jax.ShapeDtypeStruct((B, K1, Hq, 1), F32),
+                     lse_shape)
+        out_specs = (pl.BlockSpec((1, K1, Hq, dh), lambda i: (i, 0, 0, 0)),
+                     pl.BlockSpec((1, K1, Hq, 1), lambda i: (i, 0, 0, 0)),
+                     lse_spec)
+    else:
+        out_shape = (jax.ShapeDtypeStruct((B, K1, Hq, dh), F32), lse_shape)
+        out_specs = (pl.BlockSpec((1, K1, Hq, dh), lambda i: (i, 0, 0, 0)),
+                     lse_spec)
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=scale, window=window,
+                          cap=cap, encode_wire=encode_wire),
+        grid=(B,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q, k_pool, v_pool, cl_page, cl_pos, qpos)

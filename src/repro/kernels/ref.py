@@ -41,6 +41,52 @@ def count_matmul_ref(counts: jax.Array, w: jax.Array, scale: jax.Array,
     return y.astype(out_dtype)
 
 
+def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     cl_page: jax.Array, cl_pos: jax.Array, qpos: jax.Array,
+                     *, window: int = 0, cap: float = 0.0):
+    """Dense single-softmax oracle for the fused paged-decode kernel.
+
+    Same inputs/outputs as ``paged_decode.paged_decode_pallas`` (without
+    the wire epilogue); gathers every compacted-list page densely and
+    runs the exact masking/softmax math of
+    ``models.common.verify_attention_partial`` — one global max, not the
+    kernel's online per-page reduction, so agreement is fp-epsilon.
+    """
+    import math
+    B, K1, Hq, dh = q.shape
+    P_loc, psz, Hkv, _ = k_pool.shape
+    ppc = cl_page.shape[1]
+    valid = cl_page >= 0                                     # [B, ppc]
+    safe = jnp.where(valid, cl_page, 0)
+    k_s = k_pool[safe].astype(jnp.float32)       # [B, ppc, psz, Hkv, dh]
+    v_s = v_pool[safe].astype(jnp.float32)
+    k_s = k_s.reshape(B, ppc * psz, Hkv, dh)
+    v_s = v_s.reshape(B, ppc * psz, Hkv, dh)
+    if Hkv != Hq:
+        g = Hq // Hkv
+        k_s = jnp.repeat(k_s, g, axis=2)
+        v_s = jnp.repeat(v_s, g, axis=2)
+    k_pos = (cl_pos[:, :, None] + jnp.arange(psz)).reshape(B, ppc * psz)
+    ent_ok = jnp.repeat(valid, psz, axis=1)                  # [B, ppc*psz]
+    s = jnp.einsum("bqhd,bkhd->bqhk", q.astype(jnp.float32), k_s)
+    s = s / math.sqrt(dh)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    posb = qpos[:, :, None, None]                            # [B,K1,1,1]
+    mask = k_pos[:, None, None, :] <= posb
+    if window:
+        mask &= (posb - k_pos[:, None, None, :]) < window
+    mask &= ent_ok[:, None, None, :]
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bqhk,bkhd->bqhd", p, v_s)
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return o, lse
+
+
 def pack4_ref(wire: jax.Array) -> jax.Array:
     lo = wire[..., 0::2]
     hi = wire[..., 1::2]

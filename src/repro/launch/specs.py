@@ -241,6 +241,31 @@ def block_table_specs(plan: CellPlan, page_size: int):
             P(_bspec(plan), None))
 
 
+def page_list_specs(plan: CellPlan, page_size: int):
+    """(ShapeDtypeStructs, PartitionSpecs) of the compacted page lists.
+
+    Two ``[slots, pool_shards, pages_per_shard]`` int32 arrays (local
+    page row / absolute start position, -1 = no page) built by the
+    allocator alongside the block table and staged per dispatch the same
+    way.  The slot dim is batch-sharded like the tokens; the shard dim
+    is sharded over tp so each device receives exactly ITS OWN
+    ``[B_loc, 1, pages_per_shard]`` list — the fused paged-decode kernel
+    walks only these entries instead of the full ``pages_per_slot``-wide
+    table.  ``pages_per_shard = ceil(pages_per_slot / pool_shards_per_
+    group)``: the 1/cp page-count reduction the dense layout had.
+    """
+    B, S = plan.cell.global_batch, plan.cell.seq_len
+    groups = plan.dp_size if plan.batch_sharded else 1
+    shards = (plan.dp_size * plan.tp_size) // groups
+    pps = -(-pages_per_slot(S, page_size) // shards)
+    struct = jax.ShapeDtypeStruct((B, shards, pps), jnp.int32)
+    # shard dim over tp only when slots are dp-sharded (shards == tp);
+    # in the replicated-batch case the shard dim spans dp x tp
+    saxes = plan.tp if plan.batch_sharded else _pool_axes(plan)
+    sp = P(_bspec(plan), saxes, None)
+    return (struct, struct), (sp, sp)
+
+
 def decode_input_specs(plan: CellPlan):
     """(inputs, specs) for one decode step: cache + token + pos."""
     cfg, cell = plan.cfg, plan.cell
@@ -269,14 +294,16 @@ def serve_decode_input_specs(plan: CellPlan, page_size: int,
     bs = _bspec(plan)
     cache, cache_sp = paged_cache_specs(plan, page_size, num_pages)
     bt, bt_sp = block_table_specs(plan, page_size)
+    (clp, clo), (clp_sp, clo_sp) = page_list_specs(plan, page_size)
     inputs = {"cache": cache,
               "token": jax.ShapeDtypeStruct((B,), jnp.int32),
               "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
-              "bt": bt,
+              "bt": bt, "clp": clp, "clo": clo,
               "temp": jax.ShapeDtypeStruct((B,), jnp.float32),
               "key": jax.ShapeDtypeStruct((2,), jnp.uint32)}
     specs = {"cache": cache_sp, "token": P(bs), "pos": P(bs),
-             "bt": bt_sp, "temp": P(bs), "key": P()}
+             "bt": bt_sp, "clp": clp_sp, "clo": clo_sp,
+             "temp": P(bs), "key": P()}
     return inputs, specs
 
 
@@ -296,7 +323,9 @@ def serve_feed_specs(plan: CellPlan, page_size: int, spec_k: int = 0):
     """
     bs = _bspec(plan)
     _, bt_sp = block_table_specs(plan, page_size)
-    specs = {"token": P(bs), "pos": P(bs), "temp": P(bs), "bt": bt_sp}
+    _, (clp_sp, clo_sp) = page_list_specs(plan, page_size)
+    specs = {"token": P(bs), "pos": P(bs), "temp": P(bs), "bt": bt_sp,
+             "clp": clp_sp, "clo": clo_sp}
     if spec_k > 0:
         specs["vtoken"] = P(bs, None)
     return specs
@@ -327,13 +356,15 @@ def serve_verify_input_specs(plan: CellPlan, spec_k: int, page_size: int,
     bs = _bspec(plan)
     cache, cache_sp = paged_cache_specs(plan, page_size, num_pages)
     bt, bt_sp = block_table_specs(plan, page_size)
+    (clp, clo), (clp_sp, clo_sp) = page_list_specs(plan, page_size)
     K1 = spec_k + 1
     inputs = {"cache": cache,
               "token": jax.ShapeDtypeStruct((B, K1), jnp.int32),
               "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
-              "bt": bt,
+              "bt": bt, "clp": clp, "clo": clo,
               "temp": jax.ShapeDtypeStruct((B,), jnp.float32),
               "key": jax.ShapeDtypeStruct((2,), jnp.uint32)}
     specs = {"cache": cache_sp, "token": P(bs, None), "pos": P(bs),
-             "bt": bt_sp, "temp": P(bs), "key": P()}
+             "bt": bt_sp, "clp": clp_sp, "clo": clo_sp,
+             "temp": P(bs), "key": P()}
     return inputs, specs

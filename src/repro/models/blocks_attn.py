@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core import boundary
+from ..kernels import ops as kops
 from . import common
 from .context import (Context, cp_linear_index, cp_size, fsdp_gather,
                       pool_linear_index, pool_local_pages)
@@ -316,18 +317,79 @@ def _paged_kv_gather(cache, bt, ctx: Context):
     seq-sharded layout touched only its [B, max_seq / cp] slice — a
     cp-fold per-shard overhead on the decode step, deliberately traded
     for the pooled memory layout at the small B x max_seq shapes the
-    engine serves.  A host-built compacted per-shard page list (like
-    the block table itself) would restore the 1/cp slice (ROADMAP
-    §Serving follow-on).
+    engine serves.  The fused path
+    (``kernels/paged_decode.py`` + the host-built compacted per-shard
+    page lists) restores the 1/cp slice; this gather stays as the
+    reference oracle the fused kernel is fuzz-checked against.
+
+    Invariant: every non-resident entry gathers LOCAL PAGE 0 — one
+    fixed row, the same for all invalid entries — rather than clamping
+    ``loc`` to ``P_loc - 1`` (which aliased invalid entries onto
+    whatever page happened to sit last in the shard).  Page 0's
+    contents never score (``ok`` masks them); pinning all dead gathers
+    to a single row keeps the reference path's memory traffic honest
+    for the fused-vs-reference bench comparison (one hot row instead
+    of a scatter of arbitrary pool rows) and makes the gather's
+    out-of-range behavior independent of pool size.
     """
     ck, cv = cache["k"], cache["v"]
     P_loc, psz, Hkv, dh = ck.shape
     B, PPS = bt.shape
     loc, ok = pool_local_pages(bt, pool_linear_index(ctx), P_loc)
-    idx = jnp.minimum(loc, P_loc - 1)
+    idx = jnp.where(ok, loc, 0)
     kg = ck[idx].reshape(B, PPS * psz, Hkv, dh)
     vg = cv[idx].reshape(B, PPS * psz, Hkv, dh)
     return kg, vg, jnp.repeat(ok, psz, axis=1)
+
+
+def _combine_partials(o, lse, ctx: Context):
+    """Cross-shard combine of a flash partial; coded wire when the codec
+    is.  Mode "none" is the plain fp LSE combine; every coded mode
+    quantizes the locally-normalized partial to the per-token int8 wire
+    (``boundary.quantize_partial`` — bit-identical to the fused kernel's
+    epilogue) and combines through ``coded_combine_partials``, so the
+    decode step's last fp collective becomes int8 + fp LSE scalars."""
+    if ctx.codec.mode == "none":
+        return common.combine_decode_partials(o, lse, ctx.cp)
+    wire, scale = boundary.quantize_partial(o)
+    return boundary.coded_combine_partials(wire, scale, lse, ctx.cp,
+                                           jnp.float32)
+
+
+def _paged_attn_combined(q, cache, bt, page_list, qpos, ctx: Context,
+                         window, cap):
+    """Paged attention partial + cross-shard combine, both cache walks.
+
+    q [B, K1, Hq, dh] (full heads, post-gather); qpos [B, K1] absolute
+    query positions.  ``page_list`` (the engine's compacted per-shard
+    feed, local [B, 1, ppc] after sharding — None on the reference path)
+    selects the fused Pallas kernel: gather -> flash -> LSE partial in
+    one pass over this shard's resident pages, with the int8 wire
+    encode fused at the kernel epilogue when the codec is coded.  The
+    reference path gathers the full block table (``_paged_kv_gather``)
+    and scores it through ``verify_attention_partial`` — the oracle the
+    fused path is fuzz-checked against.  Returns the combined
+    [B, K1, Hq, dh] f32 attention output.
+    """
+    coded = ctx.codec.mode != "none"
+    if page_list is not None:
+        clp, clo = page_list
+        clp, clo = clp[:, 0], clo[:, 0]            # [B_loc, ppc]
+        if coded:
+            wire, scale, lse = kops.paged_flash_decode(
+                q, cache["k"], cache["v"], clp, clo, qpos,
+                window=window, cap=cap, encode_wire=True)
+            return boundary.coded_combine_partials(wire, scale, lse,
+                                                   ctx.cp, jnp.float32)
+        o, lse = kops.paged_flash_decode(q, cache["k"], cache["v"],
+                                         clp, clo, qpos,
+                                         window=window, cap=cap)
+        return common.combine_decode_partials(o, lse, ctx.cp)
+    k_s, v_s, kv_valid = _paged_kv_gather(cache, bt, ctx)
+    o, lse = common.verify_attention_partial(
+        q, k_s, v_s, pos=qpos, shard_offset=0, window=window, cap=cap,
+        kv_valid=kv_valid)
+    return _combine_partials(o, lse, ctx)
 
 
 # ---------------------------------------------------------------------------
@@ -383,12 +445,17 @@ def attn_decode_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn",
                     pos[None, :, None], (3, B, 1))
             q = _rope(cfg, q, aux_d)
             k_new = _rope(cfg, k_new, aux_d)
-        # full q heads / kv heads on every rank
+        # full q heads / kv heads on every rank — a head-space die
+        # boundary, so the gather wire is coded like every other decode
+        # collective (int8 per-token absmax; fp only for mode "none")
         if ctx.tp_size > 1:
-            q = lax.all_gather(q, ctx.tp, axis=2, tiled=True)
+            q = boundary.coded_head_all_gather(q, ctx.codec, ctx.tp,
+                                               axis=2)
         if not d["kv_rep"] and ctx.tp_size > 1:
-            k_new = lax.all_gather(k_new, ctx.tp, axis=2, tiled=True)
-            v_new = lax.all_gather(v_new, ctx.tp, axis=2, tiled=True)
+            k_new = boundary.coded_head_all_gather(k_new, ctx.codec,
+                                                   ctx.tp, axis=2)
+            v_new = boundary.coded_head_all_gather(v_new, ctx.codec,
+                                                   ctx.tp, axis=2)
         bt = aux.get("block_table")
         if bt is not None:
             # paged: route the write through the slot's block-table row
@@ -411,24 +478,26 @@ def attn_decode_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn",
                      "v": cache["v"].at[bidx, loc].set(v_w)}
     else:
         if ctx.tp_size > 1:
-            q = lax.all_gather(q, ctx.tp, axis=2, tiled=True)
+            q = boundary.coded_head_all_gather(q, ctx.codec, ctx.tp,
+                                               axis=2)
 
     window = cfg.window if kind == "local" else 0
     bt = None if is_cross else aux.get("block_table")
     if bt is not None:
-        # paged: gather K/V through the block table (position-ordered,
-        # shard_offset 0, non-resident entries masked)
-        k_s, v_s, kv_valid = _paged_kv_gather(cache, bt, ctx)
-        off, eff_pos = 0, pos
+        # paged: fused kernel over the compacted page lists when the
+        # engine feeds them, else the reference full-table gather
+        plist = aux.get("page_list")
+        o = _paged_attn_combined(q, cache, bt, plist, pos[:, None], ctx,
+                                 window, cfg.attn_softcap)[:, 0]
     else:
         k_s, v_s, kv_valid = cache["k"], cache["v"], None
         off = cp_linear_index(ctx) * cache["k"].shape[1]
         eff_pos = pos if not is_cross else jnp.full((B,), 10 ** 9,
                                                     jnp.int32)
-    o, lse = common.decode_attention_partial(
-        q[:, 0], k_s, v_s, pos=eff_pos, shard_offset=off,
-        window=window, cap=cfg.attn_softcap, kv_valid=kv_valid)
-    o = common.combine_decode_partials(o, lse, ctx.cp)
+        o, lse = common.decode_attention_partial(
+            q[:, 0], k_s, v_s, pos=eff_pos, shard_offset=off,
+            window=window, cap=cfg.attn_softcap, kv_valid=kv_valid)
+        o = _combine_partials(o, lse, ctx)
 
     # output projection: local head slice, psum over tp
     r = lax.axis_index(ctx.tp)
@@ -494,20 +563,23 @@ def attn_verify_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn"):
         q = _rope(cfg, q, aux_d)
         k_new = _rope(cfg, k_new, aux_d)
     if ctx.tp_size > 1:
-        q = lax.all_gather(q, ctx.tp, axis=2, tiled=True)
+        q = boundary.coded_head_all_gather(q, ctx.codec, ctx.tp, axis=2)
     if not d["kv_rep"] and ctx.tp_size > 1:
-        k_new = lax.all_gather(k_new, ctx.tp, axis=2, tiled=True)
-        v_new = lax.all_gather(v_new, ctx.tp, axis=2, tiled=True)
+        k_new = boundary.coded_head_all_gather(k_new, ctx.codec, ctx.tp,
+                                               axis=2)
+        v_new = boundary.coded_head_all_gather(v_new, ctx.codec, ctx.tp,
+                                               axis=2)
 
     bt = aux.get("block_table")
     window = cfg.window if kind == "local" else 0
     if bt is not None:
         # paged: one duplicate-free scatter for all K1 positions (their
         # (page, offset) targets are distinct by construction), then
-        # gather the slot's pages back position-ordered
+        # attend over the slot's resident pages — fused kernel when the
+        # engine feeds the compacted lists, reference gather otherwise
         cache = _paged_kv_write(cache, bt, qpos, k_new, v_new, ctx)
-        k_s, v_s, kv_valid = _paged_kv_gather(cache, bt, ctx)
-        off = 0
+        o = _paged_attn_combined(q, cache, bt, aux.get("page_list"),
+                                 qpos, ctx, window, cfg.attn_softcap)
     else:
         # dense: scatter the K1 new KV rows one position at a time (K1
         # is static and small) — sequential writes keep the update
@@ -527,12 +599,10 @@ def attn_verify_fwd(p, x, cache, pos, ctx: Context, aux, kind="attn"):
             ck = ck.at[bidx, loc].set(k_w)
             cv = cv.at[bidx, loc].set(v_w)
         cache = {"k": ck, "v": cv}
-        k_s, v_s, kv_valid = cache["k"], cache["v"], None
-
-    o, lse = common.verify_attention_partial(
-        q, k_s, v_s, pos=qpos, shard_offset=off,
-        window=window, cap=cfg.attn_softcap, kv_valid=kv_valid)
-    o = common.combine_decode_partials(o, lse, ctx.cp)
+        o, lse = common.verify_attention_partial(
+            q, cache["k"], cache["v"], pos=qpos, shard_offset=off,
+            window=window, cap=cfg.attn_softcap, kv_valid=None)
+        o = _combine_partials(o, lse, ctx)
 
     r = lax.axis_index(ctx.tp)
     o_loc = lax.dynamic_slice_in_dim(o, r * d["Hq_loc"], d["Hq_loc"], axis=2)

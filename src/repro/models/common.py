@@ -259,6 +259,12 @@ def combine_decode_partials(o_norm, lse, axis_names):
     """LSE-weighted combination of locally-normalized decode partials.
 
     out = sum_d w_d * o_d / sum_d w_d,  w_d = exp(lse_d - max_d lse_d).
+
+    The plain-fp path (codec "none").  Coded decode steps ship the
+    partials as int8 wire instead — ``core.boundary.quantize_partial``
+    (or the fused paged-decode kernel's epilogue) +
+    ``core.boundary.coded_combine_partials``, same math over the
+    decoded wire.
     """
     m = lax.pmax(lse, axis_names)                   # [B, Hq]
     w = jnp.exp(lse - m)

@@ -4,7 +4,7 @@ decoding, async dispatch/commit decode streams over the spike-coded
 wire, and an SLO harness (trace-driven workloads, fault injection,
 BENCH_serve.json perf trajectory).
 
-``EngineConfig`` knobs (the five that shape the serving regime):
+``EngineConfig`` knobs (the six that shape the serving regime):
 
 ===============  ========================================================
 ``async_depth``  Decode steps the host may dispatch ahead of the oldest
@@ -28,6 +28,18 @@ BENCH_serve.json perf trajectory).
                  ``ceil(prompt_len / page_size)`` pages; decode maps one
                  more page per ``page_size`` generated tokens
                  (alloc-on-extend).
+``attn_kernel``  Decode/verify attention path.  ``"fused"`` (default):
+                 the Pallas kernel walks the allocator's compacted
+                 per-shard page lists — page gather, online-softmax
+                 flash decode and the int8 wire epilogue in ONE kernel,
+                 no ``[B, pages*page_size, Hkv, dh]`` gather in HBM, per
+                 shard cost ``ceil(len / (page_size * tp))`` pages
+                 instead of the full block-table width.  ``"reference"``:
+                 the dense gather + ``verify_attention_partial`` path —
+                 the oracle the kernel is fuzz-checked against
+                 (token-identical greedy streams, enforced in
+                 tests/test_paged_decode.py).  Anything else is a typed
+                 ``EngineConfigError``.
 ``preempt``      Graceful degradation under pool pressure (default on):
                  a mid-flight ``PagePoolExhausted`` drains the pipeline
                  (limbo pages rejoin the pool) and then evicts +

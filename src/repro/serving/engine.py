@@ -89,11 +89,13 @@ the pool independently of ``num_slots * max_seq``; the default
 reproduces the old dense reservation, so shrinking it is how the same
 HBM holds more concurrent slots.
 
-Every decode-path activation collective carries the spike/int8 wire
-(``repro.core.boundary.coded_psum`` / ``wire_roundtrip``); the only fp
-collectives left on the step are head-space layout exchanges (q/kv head
-gathers) and the flash-decode LSE combine, which carry O(heads) metadata
-rather than D-space activations.
+Every decode-path activation collective carries the spike/int8 wire:
+D-space boundaries through ``repro.core.boundary.coded_psum`` /
+``wire_roundtrip``, and the head-space exchanges — q/kv head gathers
+(``coded_head_all_gather``) and the flash-decode partial combine
+(``coded_combine_partials``, fed by the fused kernel's int8 epilogue) —
+through per-token absmax int8.  The only uncoded decode-step traffic
+left is the O(heads) LSE scalars riding the combine.
 
 All per-slot computation is batch-independent — no reduction mixes
 slots, int8 scales are per-token — so under greedy decoding a slot's
@@ -181,6 +183,14 @@ class EngineConfig:
     #                                in the starving pool group instead
     #                                of failing the step (False: the
     #                                typed error propagates)
+    attn_kernel: str = "fused"     # paged decode attention path:
+    #                                "fused" walks the compacted per-shard
+    #                                page lists in one Pallas kernel
+    #                                (kernels/paged_decode.py, interpret
+    #                                mode off-TPU); "reference" scores the
+    #                                full block table per shard — the
+    #                                oracle the fused path is fuzz-checked
+    #                                against
 
 
 @dataclasses.dataclass
@@ -244,12 +254,18 @@ def make_engine_prefill_step(cfg, plan, mesh, scfg: SamplingConfig,
 
 def make_engine_decode_step(cfg, plan, mesh, scfg: SamplingConfig,
                             page_size, num_pages,
-                            replicate_weights=False):
-    """decode(params, cache, token[B], pos[B], bt[B,PPS], temp[B], key)
-    -> (next_token [B], cache) — cache donated.
+                            replicate_weights=False,
+                            attn_kernel="fused"):
+    """decode(params, cache, token[B], pos[B], bt[B,PPS], clp[B,S,ppc],
+    clo[B,S,ppc], temp[B], key) -> (next_token [B], cache) — cache
+    donated.
 
     ``cache`` is the shared KV page pool (+ slot-major state leaves);
-    ``bt`` the per-slot block table the attention gathers K/V through.
+    ``bt`` the per-slot block table the attention writes K/V through;
+    ``clp``/``clo`` the compacted per-shard page lists (local page rows
+    / start positions) the fused attention kernel walks.  With
+    ``attn_kernel="reference"`` the lists are staged but unused and
+    attention gathers the full block table per shard.
     """
     _, pspecs, _ = shard_params_specs(cfg, plan)
     ctx = make_context(plan, "decode")
@@ -257,10 +273,14 @@ def make_engine_decode_step(cfg, plan, mesh, scfg: SamplingConfig,
         pspecs = strip_dp_specs(pspecs)
         ctx = ctx.with_(dp_size=1)
     _, ispecs = serve_decode_input_specs(plan, page_size, num_pages)
+    fused = attn_kernel == "fused"
 
-    def step(params, cache, token, pos, bt, temp, key):
+    def step(params, cache, token, pos, bt, clp, clo, temp, key):
+        aux = {"block_table": bt}
+        if fused:
+            aux["page_list"] = (clp, clo)
         logits, cache = M.forward_decode(params, cache, token, pos, ctx,
-                                         aux_extra={"block_table": bt})
+                                         aux_extra=aux)
         tok = sampling.sample(logits, key, temp, tp=ctx.tp,
                               tp_size=ctx.tp_size, cfg=scfg)
         return tok, cache
@@ -268,21 +288,25 @@ def make_engine_decode_step(cfg, plan, mesh, scfg: SamplingConfig,
     fn = jax.shard_map(
         step, mesh=mesh,
         in_specs=(pspecs, ispecs["cache"], ispecs["token"], ispecs["pos"],
-                  ispecs["bt"], ispecs["temp"], ispecs["key"]),
+                  ispecs["bt"], ispecs["clp"], ispecs["clo"],
+                  ispecs["temp"], ispecs["key"]),
         out_specs=(ispecs["token"], ispecs["cache"]), check_vma=False)
     return jax.jit(fn, donate_argnums=(1,))
 
 
 def make_engine_verify_step(cfg, plan, mesh, scfg: SamplingConfig, spec_k,
                             page_size, num_pages,
-                            replicate_weights=False):
-    """verify(params, cache, tokens[B,K1], pos[B], bt[B,PPS], temp[B],
-    key) -> (tokens_out [B,K1], cache) — cache donated.
+                            replicate_weights=False,
+                            attn_kernel="fused"):
+    """verify(params, cache, tokens[B,K1], pos[B], bt[B,PPS], clp, clo,
+    temp[B], key) -> (tokens_out [B,K1], cache) — cache donated.
 
     One batched forward over all K1 = spec_k+1 speculative positions of
     every slot; column j of ``tokens_out`` is the model's (greedy or
     sampled) next token after committing ``tokens[:, :j+1]``.  Reads and
-    writes the same page pool + block table as the decode step.
+    writes the same page pool + block table as the decode step, and
+    takes the same compacted page lists for the fused attention path
+    (the kernel covers K1 >= 1 with one code path).
     """
     _, pspecs, _ = shard_params_specs(cfg, plan)
     ctx = make_context(plan, "decode")
@@ -290,10 +314,14 @@ def make_engine_verify_step(cfg, plan, mesh, scfg: SamplingConfig, spec_k,
         pspecs = strip_dp_specs(pspecs)
         ctx = ctx.with_(dp_size=1)
     _, ispecs = serve_verify_input_specs(plan, spec_k, page_size, num_pages)
+    fused = attn_kernel == "fused"
 
-    def step(params, cache, tokens, pos, bt, temp, key):
+    def step(params, cache, tokens, pos, bt, clp, clo, temp, key):
+        aux = {"block_table": bt}
+        if fused:
+            aux["page_list"] = (clp, clo)
         logits, cache = M.forward_verify(params, cache, tokens, pos, ctx,
-                                         aux_extra={"block_table": bt})
+                                         aux_extra=aux)
         tok = sampling.sample_verify(logits, key, temp, tp=ctx.tp,
                                      tp_size=ctx.tp_size, cfg=scfg)
         return tok, cache
@@ -301,7 +329,8 @@ def make_engine_verify_step(cfg, plan, mesh, scfg: SamplingConfig, spec_k,
     fn = jax.shard_map(
         step, mesh=mesh,
         in_specs=(pspecs, ispecs["cache"], ispecs["token"], ispecs["pos"],
-                  ispecs["bt"], ispecs["temp"], ispecs["key"]),
+                  ispecs["bt"], ispecs["clp"], ispecs["clo"],
+                  ispecs["temp"], ispecs["key"]),
         out_specs=(ispecs["token"], ispecs["cache"]), check_vma=False)
     return jax.jit(fn, donate_argnums=(1,))
 
@@ -348,6 +377,10 @@ class ServingEngine:
                 f"num_pages={self.num_pages} must divide over the "
                 f"dp x tp devices ({shards}) so the page pool shards "
                 "evenly")
+        if ecfg.attn_kernel not in ("fused", "reference"):
+            raise EngineConfigError(
+                f"attn_kernel={ecfg.attn_kernel!r}: expected 'fused' or "
+                "'reference'")
         cell_pre = ShapeCell("serve_admit", prefill_len, 1, "prefill")
         self.plan_pre = make_plan(cfg, cell_pre, mesh)
         self.prefill_len = prefill_len
@@ -363,7 +396,7 @@ class ServingEngine:
             cfg, self.plan_pre, mesh, scfg, ecfg.replicate_weights)
         self._decode = make_engine_decode_step(
             cfg, self.plan, mesh, scfg, ecfg.page_size, self.num_pages,
-            ecfg.replicate_weights)
+            ecfg.replicate_weights, ecfg.attn_kernel)
         self._verify = None
         if self.spec_k > 0:
             self.plan_ver = make_plan(
@@ -371,7 +404,8 @@ class ServingEngine:
                                        self.spec_k), mesh)
             self._verify = make_engine_verify_step(
                 cfg, self.plan_ver, mesh, scfg, self.spec_k,
-                ecfg.page_size, self.num_pages, ecfg.replicate_weights)
+                ecfg.page_size, self.num_pages, ecfg.replicate_weights,
+                ecfg.attn_kernel)
         self.cache = PagedKVCache(self.plan, self.plan_pre, mesh,
                                   ecfg.page_size, self.num_pages)
 
@@ -860,9 +894,11 @@ class ServingEngine:
         tok = self._token_feed()
         pos = self._stage(self._pos, self._feed_specs["pos"])
         bt = self._stage(self.cache.block_table, self._feed_specs["bt"])
+        clp = self._stage(self.cache.page_list_loc, self._feed_specs["clp"])
+        clo = self._stage(self.cache.page_list_pos, self._feed_specs["clo"])
         temp = self._stage(self._temp, self._feed_specs["temp"])
         out, self.cache.buffers = self._decode(
-            self.params, self.cache.buffers, tok, pos, bt, temp,
+            self.params, self.cache.buffers, tok, pos, bt, clp, clo, temp,
             self._next_key())
         self.cache.note_dispatch()
         self._tok_dev = out
@@ -911,10 +947,12 @@ class ServingEngine:
         self._tok_dirty.clear()
         pos = self._stage(self._pos, self._feed_specs["pos"])
         bt = self._stage(self.cache.block_table, self._feed_specs["bt"])
+        clp = self._stage(self.cache.page_list_loc, self._feed_specs["clp"])
+        clo = self._stage(self.cache.page_list_pos, self._feed_specs["clo"])
         temp = self._stage(self._temp, self._feed_specs["temp"])
         out, self.cache.buffers = self._verify(
-            self.params, self.cache.buffers, tok_in, pos, bt, temp,
-            self._next_key())
+            self.params, self.cache.buffers, tok_in, pos, bt, clp, clo,
+            temp, self._next_key())
         self.cache.note_dispatch()
         self._inflight.append(
             _InFlight("verify", [(i, self._slots[i]) for i in live], out,
@@ -1045,7 +1083,7 @@ class ServingEngine:
         from ..launch import roofline as RL
         lowered = program.lower(
             self.params, self.cache.buffers, ins["token"], ins["pos"],
-            ins["bt"], ins["temp"], ins["key"])
+            ins["bt"], ins["clp"], ins["clo"], ins["temp"], ins["key"])
         stats = RL.parse_collectives(lowered.compile().as_text())
         ndev = self.plan.dp_size * self.plan.tp_size
         per_tok = stats.wire_bytes * ndev / max(tokens_per_step, 1e-9)

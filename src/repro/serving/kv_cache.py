@@ -83,10 +83,34 @@ class SlotAllocator:
     partitions the pool into equal contiguous regions and pins each
     slot to the region of its dp group (``slot // slots_per_group``),
     matching the device-side page sharding over dp x tp.
+
+    Compacted per-shard page lists: with ``shards_per_group`` > 1 each
+    group's region further splits into one contiguous range per tp
+    shard (``pages_local`` pages each — the device-side pool slice),
+    and alongside the block table the allocator maintains
+    ``page_list_loc`` / ``page_list_pos``: ``[num_slots,
+    shards_per_group, pages_per_shard]`` int32 arrays naming, for each
+    (slot, shard), the shard-LOCAL pool rows of the slot's resident
+    pages and the absolute position of each page's first token
+    (ordinal * page_size); -1 = no page.  The fused paged-decode
+    kernel walks these lists instead of the full block table, so every
+    page a slot maps must land within ``pages_per_shard =
+    ceil(pages_per_slot / shards_per_group)`` rows on its shard —
+    ``_map_pages`` balances placement to keep that invariant (fewest
+    of the slot's pages first).  The cost of the static per-shard
+    width is a mild admission tightening: free pages clustered on one
+    shard beyond ``pages_per_shard`` are unusable by a single slot, so
+    capacity checks count ``min(free_on_shard, headroom_on_shard)``
+    per shard rather than the group total.  An overflowing page would
+    be invisible to the fused kernel (silently unattended positions),
+    so the invariant is enforced at allocation, never best-effort.
+    ``shards_per_group=1`` (the default) keeps one list per group and
+    is behavior-identical to the pre-compaction allocator.
     """
 
     def __init__(self, num_slots: int, max_seq: int, page_size: int = 64,
-                 num_pages: int | None = None, num_groups: int = 1):
+                 num_pages: int | None = None, num_groups: int = 1,
+                 shards_per_group: int = 1):
         if num_slots <= 0 or page_size <= 0 or max_seq <= 0:
             raise ValueError((num_slots, max_seq, page_size))
         self.num_slots = num_slots
@@ -103,14 +127,29 @@ class SlotAllocator:
         self.num_pages = num_pages
         self.num_groups = num_groups
         self.pages_per_group = num_pages // num_groups
+        if shards_per_group <= 0 \
+                or self.pages_per_group % shards_per_group != 0:
+            raise ValueError(
+                f"pages_per_group={self.pages_per_group} must be a "
+                f"positive multiple of shards_per_group={shards_per_group}")
+        self.shards_per_group = shards_per_group
+        #: pages of one (group, shard) range — the device pool slice size
+        self.pages_local = self.pages_per_group // shards_per_group
+        #: static width of one (slot, shard) compacted page list
+        self.pages_per_shard = -(-self.pages_per_slot // shards_per_group)
         self._slots_per_group = num_slots // num_groups
         self._free = deque(range(num_slots))
         self._free_pages = [
-            deque(range(g * self.pages_per_group,
-                        (g + 1) * self.pages_per_group))
+            [deque(range(g * self.pages_per_group + s * self.pages_local,
+                         g * self.pages_per_group
+                         + (s + 1) * self.pages_local))
+             for s in range(shards_per_group)]
             for g in range(num_groups)]
         self._len = np.zeros(num_slots, np.int64)   # current seq occupancy
         self._pages: list[list[int]] = [[] for _ in range(num_slots)]
+        #: pages each slot holds on each shard (compacted-list fill level)
+        self._shard_count = np.zeros((num_slots, shards_per_group),
+                                     np.int32)
         # deferred-free epoch state: device steps launched vs joined, and
         # pages freed while a snapshot may still name them —
         # (release_epoch, page) pairs, nondecreasing in epoch
@@ -121,18 +160,47 @@ class SlotAllocator:
         #: passed verbatim as the device block table every step
         self.block_table = np.full((num_slots, self.pages_per_slot), -1,
                                    np.int32)
+        #: [num_slots, shards_per_group, pages_per_shard] int32 — the
+        #: compacted per-shard page lists the fused decode kernel walks:
+        #: shard-local pool row of each resident page (-1 = none), and
+        #: the absolute position of the page's first token.  Staged to
+        #: device per dispatch exactly like the block table.
+        self.page_list_loc = np.full(
+            (num_slots, shards_per_group, self.pages_per_shard), -1,
+            np.int32)
+        self.page_list_pos = np.full(
+            (num_slots, shards_per_group, self.pages_per_shard), -1,
+            np.int32)
 
     # -- sizing / introspection -------------------------------------------
 
     def group_of(self, slot: int) -> int:
         return slot // self._slots_per_group
 
+    def _shard_of(self, page: int) -> int:
+        """tp-shard index (within its group) holding global ``page``."""
+        return (page // self.pages_local) % self.shards_per_group
+
     @property
     def num_free(self) -> int:
         return len(self._free)
 
     def free_pages_in_group(self, group: int) -> int:
-        return len(self._free_pages[group])
+        return sum(len(d) for d in self._free_pages[group])
+
+    def _fresh_capacity(self, group: int) -> int:
+        """Pages a FRESH slot of ``group`` could map right now: per-shard
+        free pages, capped at the compacted-list width per shard."""
+        return sum(min(len(d), self.pages_per_shard)
+                   for d in self._free_pages[group])
+
+    def _slot_capacity(self, slot: int) -> int:
+        """Additional pages ``slot`` could map right now (per-shard free
+        pages capped at the slot's remaining compacted-list headroom)."""
+        free = self._free_pages[self.group_of(slot)]
+        cnt = self._shard_count[slot]
+        return sum(min(len(free[s]), self.pages_per_shard - int(cnt[s]))
+                   for s in range(self.shards_per_group))
 
     def pages_needed(self, seq_len: int) -> int:
         return -(-seq_len // self.page_size)
@@ -186,7 +254,8 @@ class SlotAllocator:
         self._committed += 1
         while self._limbo and self._limbo[0][0] <= self._committed:
             _, page = self._limbo.popleft()
-            self._free_pages[page // self.pages_per_group].append(page)
+            g = page // self.pages_per_group
+            self._free_pages[g][self._shard_of(page)].append(page)
 
     def _release_page(self, page: int):
         if self._dispatched > self._committed:
@@ -194,27 +263,51 @@ class SlotAllocator:
             # tag with the newest epoch that could hold a snapshot
             self._limbo.append((self._dispatched, page))
         else:
-            self._free_pages[page // self.pages_per_group].append(page)
+            g = page // self.pages_per_group
+            self._free_pages[g][self._shard_of(page)].append(page)
 
     # -- page mapping (internal) ------------------------------------------
 
     def _map_pages(self, slot: int, n: int):
-        free = self._free_pages[self.group_of(slot)]
-        if n > len(free):
+        g = self.group_of(slot)
+        if n > self._slot_capacity(slot):
+            free = self.free_pages_in_group(g)
             raise PagePoolExhausted(
-                f"slot {slot} (group {self.group_of(slot)}) needs {n} "
-                f"page(s); {len(free)} free of {self.pages_per_group} in "
-                f"its group ({self.pages_in_use}/{self.num_pages} mapped "
-                f"pool-wide)")
+                f"slot {slot} (group {g}) needs {n} page(s); capacity "
+                f"{self._slot_capacity(slot)} ({free} free of "
+                f"{self.pages_per_group} in its group, per-shard "
+                f"compacted-list width {self.pages_per_shard}; "
+                f"{self.pages_in_use}/{self.num_pages} mapped pool-wide)")
+        free = self._free_pages[g]
+        cnt = self._shard_count[slot]
         for _ in range(n):
-            page = free.popleft()
-            self.block_table[slot, len(self._pages[slot])] = page
+            # balanced placement: the shard where this slot holds the
+            # fewest pages (so no shard's compacted list overflows its
+            # static width), tie-broken toward the shard with the most
+            # free pages (global balance), then lowest index (determinism)
+            s = min((s for s in range(self.shards_per_group)
+                     if free[s] and cnt[s] < self.pages_per_shard),
+                    key=lambda s: (int(cnt[s]), -len(free[s]), s))
+            page = free[s].popleft()
+            ordinal = len(self._pages[slot])
+            self.block_table[slot, ordinal] = page
+            self.page_list_loc[slot, s, cnt[s]] = page % self.pages_local
+            self.page_list_pos[slot, s, cnt[s]] = ordinal * self.page_size
+            cnt[s] += 1
             self._pages[slot].append(page)
 
     def _unmap_tail(self, slot: int, keep: int):
+        cnt = self._shard_count[slot]
         while len(self._pages[slot]) > keep:
             page = self._pages[slot].pop()
             self.block_table[slot, len(self._pages[slot])] = -1
+            # the popped page has the slot's highest ordinal, and each
+            # per-shard list is ordinal-ordered, so it is the LAST live
+            # entry of its own shard's compacted list
+            s = self._shard_of(page)
+            cnt[s] -= 1
+            self.page_list_loc[slot, s, cnt[s]] = -1
+            self.page_list_pos[slot, s, cnt[s]] = -1
             self._release_page(page)
 
     # -- slot lifecycle ----------------------------------------------------
@@ -224,7 +317,7 @@ class SlotAllocator:
         if not 0 < seq_len <= self.max_seq:
             return False
         need = self.pages_needed(seq_len)
-        return any(need <= len(self._free_pages[self.group_of(s)])
+        return any(need <= self._fresh_capacity(self.group_of(s))
                    for s in self._free)
 
     def alloc(self, seq_len: int) -> int:
@@ -241,7 +334,7 @@ class SlotAllocator:
             raise SlotsExhausted(f"all {self.num_slots} slots in use")
         need = self.pages_needed(seq_len)
         for slot in self._free:
-            if need <= len(self._free_pages[self.group_of(slot)]):
+            if need <= self._fresh_capacity(self.group_of(slot)):
                 break
         else:
             raise PagePoolExhausted(
@@ -398,9 +491,14 @@ class PagedKVCache:
         self.num_pages = (default_num_pages(plan, page_size)
                           if num_pages is None else num_pages)
         groups = plan.dp_size if plan.batch_sharded else 1
+        # pool shards per group: the page dim is sharded over dp x tp, so
+        # each group's contiguous region spans this many device slices —
+        # the compacted per-shard page lists are built against it
+        shards = (plan.dp_size * plan.tp_size) // groups
         self.allocator = SlotAllocator(
             plan.cell.global_batch, plan.cell.seq_len, page_size,
-            num_pages=self.num_pages, num_groups=groups)
+            num_pages=self.num_pages, num_groups=groups,
+            shards_per_group=shards)
         self.buffers = make_init_fn(plan, mesh, page_size, self.num_pages)()
         self._insert = make_insert_fn(plan, plan_pre, mesh, page_size,
                                       self.num_pages)
@@ -414,6 +512,18 @@ class PagedKVCache:
     def block_table(self) -> np.ndarray:
         """Host block table [slots, pages_per_slot] int32, -1 unmapped."""
         return self.allocator.block_table
+
+    @property
+    def page_list_loc(self) -> np.ndarray:
+        """Compacted per-shard page lists [slots, shards, pages_per_shard]
+        int32: shard-local pool row of each resident page, -1 = none."""
+        return self.allocator.page_list_loc
+
+    @property
+    def page_list_pos(self) -> np.ndarray:
+        """Absolute position of each compacted-list page's first token
+        [slots, shards, pages_per_shard] int32, -1 = no page."""
+        return self.allocator.page_list_pos
 
     def admit(self, pre_cache, seq_len: int) -> int:
         """Allocate a slot, map ``ceil(seq_len/page_size)`` pages, and

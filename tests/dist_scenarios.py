@@ -491,6 +491,60 @@ def scenario_serving_paged_mixed():
           f"denseMB={ps['kv_bytes_dense']/1e6:.2f}")
 
 
+def scenario_serving_fused_parity():
+    """Fused paged-decode kernel on the (2, 4) mesh: the compacted
+    per-shard page lists really partition each slot's pages across the
+    4 pool shards of its dp group, and the fused gather->flash->combine
+    path is token-identical to the reference dense-gather path — for
+    the plain and spike codecs, with the pool sized below the dense
+    reservation so slots contend for pages, and (spike) through the
+    speculative verify path (K1 > 1) as well."""
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.configs.reduced import reduced
+    from repro.launch import specs as SP, train as TR
+    from repro.serving import EngineConfig, Request, ServingEngine
+    mesh = mesh24()
+    rng = np.random.RandomState(7)
+    base = [list(rng.randint(0, 256, 4)) for _ in range(3)]
+    prompts = ([base[i % 3] * 4 for i in range(4)]
+               + [list(rng.randint(0, 256, 8)) for _ in range(3)])
+    reqs = lambda: [Request(rid=i, prompt=p, max_new_tokens=10)
+                    for i, p in enumerate(prompts)]
+    kw = dict(num_slots=4, max_seq=48, prefill_len=16, page_size=8,
+              num_pages=16)
+    for codec in ("none", "spike_fused"):
+        hnn = "ann" if codec == "none" else "hnn"
+        cfg = reduced(get_config("qwen1.5-0.5b", hnn_mode=hnn)).replace(
+            dtype=jnp.float32, codec=codec)
+        cell = ShapeCell("serve_decode", 48, 4, "decode")
+        plan = SP.make_plan(cfg, cell, mesh)
+        params = TR.init_sharded_params(cfg, plan, mesh,
+                                        jax.random.PRNGKey(0))
+        ref = ServingEngine(cfg, mesh, params, EngineConfig(
+            **kw, attn_kernel="reference"))
+        res_r = ref.run(reqs())
+        fus = ServingEngine(cfg, mesh, params, EngineConfig(
+            **kw, attn_kernel="fused"))
+        res_f = fus.run(reqs())
+        for i in range(len(prompts)):
+            assert res_f[i] == res_r[i], (codec, i, res_r[i], res_f[i])
+        alloc = fus.cache.allocator
+        # the engine really built 4-way compacted lists for this mesh
+        assert alloc.shards_per_group == 4
+        assert alloc.pages_per_shard == -(-alloc.pages_per_slot // 4)
+        assert alloc.pages_in_use == 0
+        assert (alloc.page_list_loc == -1).all()
+        if codec == "spike_fused":
+            spec = ServingEngine(cfg, mesh, params, EngineConfig(
+                **kw, attn_kernel="fused", spec_k=3))
+            res_s = spec.run(reqs())
+            assert spec.spec_verifies > 0 and spec.mean_accepted_len > 1.0
+            for i in range(len(prompts)):
+                assert res_s[i] == res_r[i], (i, res_r[i], res_s[i])
+        print(f"fused parity OK {codec}")
+
+
 def scenario_serving_spec_recurrent_fallback():
     """Recurrent-state families cannot roll back: the engine must force
     spec_k=0 and still serve correctly."""

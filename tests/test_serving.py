@@ -482,6 +482,15 @@ def test_paged_pool_shared_across_mixed_lengths():
     assert "paged mixed OK" in out
 
 
+def test_fused_paged_decode_parity_on_mesh():
+    """Fused Pallas paged-decode vs reference dense gather on the 2x4
+    mesh: 4-way compacted per-shard page lists, pool below the dense
+    reservation, token-identical streams for both codecs and through
+    the speculative verify path."""
+    out = run("serving_fused_parity")
+    assert out.count("fused parity OK") == 2
+
+
 def test_speculative_decoding_parity_and_acceptance():
     """Tentpole invariant: greedy spec decoding (spec_k=3) is
     token-identical to the vanilla engine for `none` and `spike_fused`,
