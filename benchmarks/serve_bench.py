@@ -39,6 +39,16 @@ paths must emit identical greedy tokens (asserted) and the report
 isolates the kernel's step-latency delta at identical wire bytes/token;
 results are then keyed ``<codec>/<kernel>``.
 
+With ``--disagg on`` (needs a dp>=2 mesh, e.g. ``--mesh 2x2``) the
+engine splits prefill and decode across dp groups and every admission
+migrates the finished prefill's paged KV to its decode group in one
+coded ppermute (``--kv-wire`` picks the pow2-absmax int8 wire or fp).
+``--disagg on,off`` sweeps both against one param init, asserts the
+token streams are bit-identical (disaggregation is a placement change,
+never a decode change), keys results ``<codec>/disagg-{on,off}``, and
+reports migKB/req next to the EMIO cycles/token the migration traffic
+adds to the step trace.
+
 With ``--out BENCH_serve.json`` the same run also emits the structured
 perf-trajectory artifact (schema ``bench_serve/v1``, see
 ``repro.serving.slo``): per-codec tokens/s, stepus/TTFT/TPOT
@@ -91,6 +101,20 @@ def main():
                          "keyed <codec>/<kernel> so the fused-vs-"
                          "reference step-latency delta lands in one "
                          "BENCH_serve.json")
+    ap.add_argument("--disagg", default="off",
+                    help="disaggregated prefill/decode: 'on', 'off', or "
+                         "a comma list to sweep both — results are then "
+                         "keyed <codec>/disagg-{on,off}.  'on' needs a "
+                         "dp>=2 mesh (e.g. --mesh 2x2): dp group 0 "
+                         "prefills, the rest decode, and every admitted "
+                         "request's KV migrates in one coded ppermute; "
+                         "the report adds migKB/req and the sweep "
+                         "asserts disagg token streams are identical to "
+                         "colocated per codec")
+    ap.add_argument("--kv-wire", default="coded",
+                    help="KV migration wire format when --disagg is on: "
+                         "'coded' (pow2-absmax int8, exact roundtrip) "
+                         "or 'fp'")
     ap.add_argument("--repetitive", action="store_true",
                     help="cyclic prompts (the drafter's best case)")
     ap.add_argument("--out", default="",
@@ -130,12 +154,20 @@ def main():
 
     baseline_tokens = None
     bench_results = {}
+    codec_streams = {}
     codecs = args.codecs.split(",")
     kernels = args.attn_kernel.split(",")
-    pairs = [(c, k) for c in codecs for k in kernels]
+    disagg_modes = args.disagg.split(",")
+    for m in disagg_modes:
+        if m not in ("on", "off"):
+            raise SystemExit(f"--disagg must be on/off, got {m!r}")
+    pairs = [(c, k, d) for c in codecs for k in kernels
+             for d in disagg_modes]
     models = {}
-    for codec, kernel in pairs:
+    for codec, kernel, disagg in pairs:
         key = codec if len(kernels) == 1 else f"{codec}/{kernel}"
+        if len(disagg_modes) > 1:
+            key = f"{key}/disagg-{disagg}"
         if codec not in models:
             hnn = "ann" if codec == "none" else "hnn"
             cfg = reduced(get_config(args.arch, hnn_mode=hnn)).replace(
@@ -154,7 +186,9 @@ def main():
                             num_pages=args.num_pages,
                             spec_k=args.spec_k,
                             async_depth=args.async_depth,
-                            attn_kernel=kernel)
+                            attn_kernel=kernel,
+                            disagg=(disagg == "on"),
+                            kv_wire=args.kv_wire)
         reqs = [Request(rid=i, prompt=p, max_new_tokens=args.gen)
                 for i, p in enumerate(prompts)]
 
@@ -187,6 +221,11 @@ def main():
         dt = ts[-1] - ts[0]
         toks = engine.tokens_generated
         assert len(results) == args.requests
+        # disagg is a placement change, not a decode change: the token
+        # streams must be bit-identical to the colocated run
+        ref_streams = codec_streams.setdefault((codec, kernel), results)
+        assert results == ref_streams, (
+            f"{key}: disagg token streams diverge from colocated")
         p50, p95, p99 = np.percentile(np.diff(np.asarray(ts)) * 1e6,
                                       [50, 95, 99])
         if baseline_tokens is None:
@@ -202,6 +241,11 @@ def main():
             _, vper_tok = engine.verify_wire_stats(mal)
             extra = (f" spec_k={engine.spec_k} accepted={mal:.2f} "
                      f"vwireKB/tok={vper_tok/1e3:.2f}")
+        if disagg == "on":
+            mig_kb_req = (engine.migrated_wire_bytes / 1e3
+                          / max(engine.migrations, 1))
+            extra += (f" disagg={args.kv_wire} "
+                      f"migKB/req={mig_kb_req:.1f}")
         peak_kb = ps["peak_pages_in_use"] * engine.cache.kv_page_bytes()
         print(f"serve/{key},{us_per_tok:.1f},"
               f"tok/s={toks/dt:.1f} wireKB/tok={per_tok/1e3:.2f} "
@@ -213,6 +257,14 @@ def main():
               f"kvKBdense={ps['kv_bytes_dense']/1e3:.1f}{extra}")
         rep = monitor.report()
         rep["wire_kb_per_tok"] = per_tok / 1e3
+        # EMIO co-simulation headline off the same step trace (migration
+        # bytes are folded into each tick's wire_bytes by the monitor)
+        from repro.sim.noc import emio_cost_from_trace
+        emio = emio_cost_from_trace(monitor.step_trace())
+        rep["emio_cycles_per_token"] = emio["emio_cycles_per_token"]
+        rep["mig_kb_per_req"] = (engine.migrated_wire_bytes / 1e3
+                                 / max(engine.migrations, 1)
+                                 if engine.migrations else 0.0)
         bench_results[key] = rep
         if args.trace_out:
             path = args.trace_out
@@ -230,7 +282,8 @@ def main():
             "prompt_len": args.prompt_len, "gen": args.gen,
             "page_size": args.page_size, "num_pages": args.num_pages,
             "spec_k": args.spec_k, "async_depth": args.async_depth,
-            "attn_kernel": args.attn_kernel,
+            "attn_kernel": args.attn_kernel, "disagg": args.disagg,
+            "kv_wire": args.kv_wire,
         }
         write_bench(args.out, make_bench_payload(run_cfg, bench_results))
         print(f"# BENCH_serve.json: {args.out}", file=sys.stderr)

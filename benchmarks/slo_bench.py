@@ -52,6 +52,12 @@ def main():
                          "preemption)")
     ap.add_argument("--spec-k", type=int, default=0)
     ap.add_argument("--async-depth", type=int, default=0)
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode (needs dp>=2, "
+                         "e.g. --mesh 2x2): migration bytes land in the "
+                         "step trace and the EMIO pricing")
+    ap.add_argument("--kv-wire", default="coded",
+                    help="KV migration wire when --disagg: coded | fp")
     # -- workload ----------------------------------------------------------
     ap.add_argument("--preset", default="multitenant",
                     help="workload preset (steady/bursty/longtail/"
@@ -140,7 +146,8 @@ def main():
                             page_size=args.page_size,
                             num_pages=args.num_pages,
                             spec_k=args.spec_k,
-                            async_depth=args.async_depth)
+                            async_depth=args.async_depth,
+                            disagg=args.disagg, kv_wire=args.kv_wire)
         plan = SP.make_plan(cfg, ShapeCell("serve_decode", max_seq,
                                            args.slots, "decode"), mesh)
         params = TR.init_sharded_params(cfg, plan, mesh,
@@ -179,7 +186,9 @@ def main():
               f"preempt={rep['faults']['preemptions']} "
               f"suspend={rep['faults']['suspends']} "
               f"restarts={rep['requests']['restarts']} "
-              f"emio cyc/tok={emio['emio_cycles_per_token']:.0f}")
+              f"emio cyc/tok={emio['emio_cycles_per_token']:.0f}"
+              + (f" migKB/req={rep['migration']['kb_per_request']:.1f}"
+                 if args.disagg else ""))
         if args.per_class:
             for cls, crep in monitor.per_class_report().items():
                 print(f"#   {cls}: n={crep['finished']} "
@@ -200,7 +209,9 @@ def main():
             "slots": args.slots, "prompt_len": args.prompt_len,
             "gen": args.gen, "page_size": args.page_size,
             "num_pages": args.num_pages, "spec_k": args.spec_k,
-            "async_depth": args.async_depth, "preset": args.preset,
+            "async_depth": args.async_depth,
+            "disagg": args.disagg, "kv_wire": args.kv_wire,
+            "preset": args.preset,
             "horizon_s": args.horizon, "load": args.load,
             "seed": args.seed, "steps_per_s": args.steps_per_s,
             "requests": len(trace),

@@ -4,7 +4,7 @@ decoding, async dispatch/commit decode streams over the spike-coded
 wire, and an SLO harness (trace-driven workloads, fault injection,
 BENCH_serve.json perf trajectory).
 
-``EngineConfig`` knobs (the six that shape the serving regime):
+``EngineConfig`` knobs (the ones that shape the serving regime):
 
 ===============  ========================================================
 ``async_depth``  Decode steps the host may dispatch ahead of the oldest
@@ -48,6 +48,29 @@ BENCH_serve.json perf trajectory).
                  stay bit-identical to an uninterrupted run
                  (fuzz-enforced), so only latency pays.  False: the
                  typed error propagates to the caller's own policy.
+``disagg``       Disaggregated prefill/decode (default off; needs a
+                 dp >= 2 mesh).  The first ``prefill_groups`` dp groups
+                 own admission prefill; the rest own decode.  Each
+                 admitted request's paged KV (and any recurrent-state
+                 rows) migrates to its decode group in ONE ppermute onto
+                 pages the decode group mapped at matching per-shard
+                 positions; admission pre-checks BOTH sides (slot, pages,
+                 mirrored placement) so a started prefill can never
+                 strand.  Greedy streams are token-identical to the
+                 colocated engine (fuzz-enforced across spec_k x
+                 async_depth x codec x kv_wire).
+``prefill_groups``  How many dp groups ``disagg`` reserves for prefill
+                 (default 1; must leave >= 1 decode group).
+``kv_wire``      Migration wire format: ``"fp"`` moves KV pages at pool
+                 dtype; ``"coded"`` moves per-page pow2-absmax int8
+                 (~0.3x the bytes at dh=16) whose power-of-two scales
+                 make encode/decode exactly idempotent on the pool — so
+                 the coded wire is also token-identical, not just close
+                 (see ``repro.core.boundary.coded_kv_migrate``).
+``router``       Decode-group choice per migration: ``"load"`` (default)
+                 picks the group with the fewest pages in use + limbo
+                 (ties to the lowest id), ``"rr"`` round-robins over
+                 mirror-capable groups.
 ===============  ========================================================
 
 SLO harness knobs (``repro.serving.workload`` / ``repro.serving.slo``):

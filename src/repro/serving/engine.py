@@ -191,6 +191,28 @@ class EngineConfig:
     #                                full block table per shard — the
     #                                oracle the fused path is fuzz-checked
     #                                against
+    disagg: bool = False           # disaggregated prefill/decode roles:
+    #                                dedicate the first prefill_groups dp
+    #                                groups to admission prefills and
+    #                                migrate each finished prefill's paged
+    #                                KV (+ state rows) to a decode-role
+    #                                group through one coded ppermute
+    #                                (False: colocated, behavior-identical
+    #                                to the pre-disagg engine)
+    prefill_groups: int = 1        # dp groups dedicated to prefill when
+    #                                disagg=True (the rest decode); must
+    #                                satisfy 0 < prefill_groups < dp_size
+    kv_wire: str = "fp"            # KV payload discipline at pool insert
+    #                                and on the migration wire: "fp"
+    #                                (exact, default) or "coded" (pow2-
+    #                                absmax int8 roundtrip at insert +
+    #                                int8 wire on migration — lossy once,
+    #                                then idempotent, so disagg stays
+    #                                token-identical to colocated)
+    router: str = "load"           # disagg admission router picking the
+    #                                migration target among decode
+    #                                groups: "load" (fewest pages mapped
+    #                                + in limbo) or "rr" (round-robin)
 
 
 @dataclasses.dataclass
@@ -211,6 +233,31 @@ class _Slot:
     #: the value folds into host bookkeeping at the slot's first commit,
     #: at verify dispatch, or when nothing else can run)
     pending_first: Optional[object] = None
+
+
+@dataclasses.dataclass
+class _Resume:
+    """Queue entry for a suspended mid-generation request: re-admit with
+    the committed tokens as part of the prompt (work-preserving) instead
+    of restarting from scratch.
+
+    The effective prefill prompt is ``req.prompt + prior``; the admitted
+    slot's ``out`` is pre-seeded with ``prior`` so retirement limits,
+    committed-position accounting and the final output all see the full
+    request — under greedy sampling the re-prefilled continuation is
+    token-identical to the uninterrupted run, so only latency, not
+    output, records the suspension.  ``suspend`` only creates one when
+    the combined length still fits the prefill path (and, for
+    recurrent families, lands on a valid exact-length bucket);
+    otherwise it falls back to the old restart-from-scratch entry.
+    """
+
+    req: Request
+    prior: list                      # committed tokens at suspend time
+
+    @property
+    def rid(self):
+        return self.req.rid
 
 
 @dataclasses.dataclass
@@ -381,6 +428,27 @@ class ServingEngine:
             raise EngineConfigError(
                 f"attn_kernel={ecfg.attn_kernel!r}: expected 'fused' or "
                 "'reference'")
+        if ecfg.kv_wire not in ("fp", "coded"):
+            raise EngineConfigError(
+                f"kv_wire={ecfg.kv_wire!r}: expected 'fp' or 'coded'")
+        if ecfg.router not in ("load", "rr"):
+            raise EngineConfigError(
+                f"router={ecfg.router!r}: expected 'load' or 'rr'")
+        if ecfg.disagg:
+            if len(self.plan.dp) != 1:
+                raise EngineConfigError(
+                    "disagg=True needs exactly one dp mesh axis (the "
+                    f"migration ppermute axis); plan has {self.plan.dp}")
+            if self.plan.dp_size < 2:
+                raise EngineConfigError(
+                    "disagg=True needs dp_size >= 2 (at least one "
+                    "prefill-role and one decode-role group); "
+                    f"dp_size={self.plan.dp_size}")
+            if not 0 < ecfg.prefill_groups < self.plan.dp_size:
+                raise EngineConfigError(
+                    f"prefill_groups={ecfg.prefill_groups} must be in "
+                    f"(0, dp_size={self.plan.dp_size}): both roles need "
+                    "at least one dp group")
         cell_pre = ShapeCell("serve_admit", prefill_len, 1, "prefill")
         self.plan_pre = make_plan(cfg, cell_pre, mesh)
         self.prefill_len = prefill_len
@@ -392,8 +460,14 @@ class ServingEngine:
         self.spec_k = 0 if self._has_state else ecfg.spec_k
 
         scfg = SamplingConfig(top_k=ecfg.top_k, top_p=ecfg.top_p)
+        self._scfg = scfg
         self._prefill = make_engine_prefill_step(
             cfg, self.plan_pre, mesh, scfg, ecfg.replicate_weights)
+        #: exact-length prefill buckets for recurrent families: seq len
+        #: -> (compiled prefill step, its plan) — lazy, the default
+        #: full-length bucket is pre-registered
+        self._prefill_buckets = {prefill_len: (self._prefill,
+                                               self.plan_pre)}
         self._decode = make_engine_decode_step(
             cfg, self.plan, mesh, scfg, ecfg.page_size, self.num_pages,
             ecfg.replicate_weights, ecfg.attn_kernel)
@@ -407,7 +481,18 @@ class ServingEngine:
                 ecfg.page_size, self.num_pages, ecfg.replicate_weights,
                 ecfg.attn_kernel)
         self.cache = PagedKVCache(self.plan, self.plan_pre, mesh,
-                                  ecfg.page_size, self.num_pages)
+                                  ecfg.page_size, self.num_pages,
+                                  kv_wire=ecfg.kv_wire)
+        #: disaggregated roles: the first ``prefill_groups`` dp groups
+        #: take admission prefills, the rest decode; colocated engines
+        #: leave both None and admit anywhere
+        self._prefill_group_ids = None
+        self._decode_group_ids = None
+        if ecfg.disagg:
+            ng = self.cache.allocator.num_groups
+            self._prefill_group_ids = tuple(range(ecfg.prefill_groups))
+            self._decode_group_ids = tuple(range(ecfg.prefill_groups, ng))
+        self._rr_next = 0              # round-robin router cursor
 
         n = ecfg.num_slots
         self._tokens = np.zeros(n, np.int32)
@@ -444,11 +529,16 @@ class ServingEngine:
         self.preemptions = 0       # evict + re-queue events (pool
         #                            pressure or injected faults)
         self.suspends = 0          # drain + snapshot + resume events
+        self.migrations = 0        # prefill -> decode KV handoffs (disagg)
+        self.migrated_wire_bytes = 0   # coded/fp bytes those handoffs put
+        #                                on the dp boundary (shape-static
+        #                                per migration)
         #: observability hooks: objects whose optional ``on_submit`` /
         #: ``on_admit`` / ``on_first_token`` / ``on_finish`` /
-        #: ``on_preempt`` / ``on_suspend`` methods are called at the
-        #: matching lifecycle points (see ``repro.serving.slo``); the
-        #: per-tick ``on_step`` hook stays on ``run(on_step=...)``
+        #: ``on_preempt`` / ``on_suspend`` / ``on_migrate`` methods are
+        #: called at the matching lifecycle points (see
+        #: ``repro.serving.slo``); the per-tick ``on_step`` hook stays
+        #: on ``run(on_step=...)``
         self.observers: list = []
 
     # -- request lifecycle -------------------------------------------------
@@ -461,11 +551,15 @@ class ServingEngine:
         if not 0 < P_len <= self.prefill_len:
             raise ValueError(
                 f"prompt len {P_len} not in (0, {self.prefill_len}]")
-        if self._has_state and P_len != self.prefill_len:
+        if self._has_state and P_len % self.plan.tp_size != 0:
+            # right-padding would corrupt the prefill-final recurrent
+            # state, so these families prefill through an EXACT-length
+            # bucket instead — any multiple of tp_size (the sequence
+            # sharding granularity) up to prefill_len is admissible
             raise ValueError(
-                "recurrent-state families need prompt_len == prefill_len "
-                f"({self.prefill_len}); right-padding would corrupt the "
-                "prefill-final state")
+                "recurrent-state families prefill exact-length buckets: "
+                f"prompt len {P_len} must be a multiple of tp_size "
+                f"({self.plan.tp_size})")
         alloc = self.cache.allocator
         if alloc.pages_needed(P_len) > alloc.pages_per_group:
             raise ValueError(
@@ -486,8 +580,41 @@ class ServingEngine:
         self._tick += 1
         return jax.random.fold_in(self._key, self._tick)
 
-    def _admit(self, req: Request):
-        """Prefill ``req`` into a free slot — with NO host sync.
+    @staticmethod
+    def _entry_parts(entry):
+        """(request, prior committed tokens, effective prefill prompt)
+        for a queue entry — ``Request`` or a suspend-time ``_Resume``."""
+        if isinstance(entry, _Resume):
+            return (entry.req, entry.prior,
+                    list(entry.req.prompt) + list(entry.prior))
+        return entry, [], list(entry.prompt)
+
+    def _prefill_for(self, P_len: int):
+        """(padded seq len, compiled prefill step, its plan) for a
+        ``P_len``-token prompt.
+
+        Attention families right-pad into the single full-length prefill
+        (exact — padded positions are causally masked and never
+        attended).  Recurrent families fold every position into the
+        running state, so padding is NOT exact: they prefill through an
+        exact-length bucket instead, compiled lazily per distinct prompt
+        length (``submit`` guarantees tp_size-divisibility).
+        """
+        if not self._has_state:
+            return self.prefill_len, self._prefill, self.plan_pre
+        if P_len not in self._prefill_buckets:
+            cell = ShapeCell("serve_admit", P_len, 1, "prefill")
+            plan_b = make_plan(self.cfg, cell, self.mesh)
+            prog = make_engine_prefill_step(
+                self.cfg, plan_b, self.mesh, self._scfg,
+                self.ecfg.replicate_weights)
+            self._prefill_buckets[P_len] = (prog, plan_b)
+        prog, plan_b = self._prefill_buckets[P_len]
+        return P_len, prog, plan_b
+
+    def _admit(self, entry):
+        """Prefill a queue entry (``Request`` or ``_Resume``) into a free
+        slot — with NO host sync.
 
         The prefill/insert launches are asynchronous, so under
         ``async_depth > 0`` they overlap whatever decode/verify step is
@@ -501,16 +628,33 @@ class ServingEngine:
         the sync is free — or earlier when the spec path needs host
         tokens to draft.
         """
-        P_len = len(req.prompt)
-        toks = np.zeros((1, self.prefill_len), np.int32)
-        toks[0, :P_len] = np.asarray(req.prompt, np.int32)
-        first, pre_cache = self._prefill(
+        req, prior, prompt = self._entry_parts(entry)
+        P_len = len(prompt)
+        S_pre, prefill_fn, plan_pre = self._prefill_for(P_len)
+        toks = np.zeros((1, S_pre), np.int32)
+        toks[0, :P_len] = np.asarray(prompt, np.int32)
+        first, pre_cache = prefill_fn(
             self.params, toks, np.array([P_len - 1], np.int32),
             np.array([req.temperature], np.float32), self._next_key())
         # admit maps ceil(P_len/page_size) pages — O(prompt), not
         # O(max_seq); each decode step maps the next page on demand
-        slot = self.cache.admit(pre_cache, P_len)
-        st = _Slot(req, [], None, seq=self._admit_seq, pending_first=first)
+        slot = self.cache.admit(pre_cache, P_len, plan_pre=plan_pre,
+                                groups=self._prefill_group_ids)
+        if self.ecfg.disagg:
+            # prefill-role group done: hand the paged KV (+ state rows)
+            # to a decode-role group through the coded one-ppermute
+            # migration.  The dispatch-side pre-check (_can_admit_next)
+            # already proved a mirror-capable target exists, so routing
+            # here cannot fail.
+            dst = self._route_migration(slot)
+            src_g = self.cache.allocator.group_of(slot)
+            wire = self.cache.migrate_wire_bytes()
+            slot = self.cache.migrate(slot, dst)
+            self.migrations += 1
+            self.migrated_wire_bytes += wire
+            self._emit("on_migrate", req.rid, src_g, dst, wire)
+        st = _Slot(req, list(prior), None, seq=self._admit_seq,
+                   pending_first=first)
         self._admit_seq += 1
         self._slots[slot] = st
         self._pos[slot] = P_len
@@ -522,7 +666,7 @@ class ServingEngine:
         # retirement the host can predict WITHOUT the token value (count
         # and context limits) applies now so the slot is never scheduled;
         # the deferred value still folds later for the output/EOS
-        if (st.req.max_new_tokens <= 1
+        if (self._n_committed(st) >= st.req.max_new_tokens
                 or self._committed_pos(st) >= self.ecfg.max_seq):
             st.live = False
 
@@ -564,7 +708,11 @@ class ServingEngine:
             # next feed takes it from the (now correct) host shadow
             self._tok_dirty.add(slot)
         if self.spec_k > 0 and st.drafter is None:
-            st.drafter = NGramDrafter(list(st.req.prompt) + [first])
+            # st.out holds the committed stream so far — prior tokens
+            # carried across a work-preserving suspend plus this first
+            # token — so the drafter sees the same history an
+            # uninterrupted run would have fed it incrementally
+            st.drafter = NGramDrafter(list(st.req.prompt) + st.out)
         self._emit("on_first_token", st.req.rid)
         self._maybe_retire(slot, first)
         return self._slots[slot] is st
@@ -621,6 +769,87 @@ class ServingEngine:
                        if s is not None),
                       key=lambda i: self._slots[i].seq)
 
+    # -- disaggregated admission / routing ---------------------------------
+
+    def _route_migration(self, src_slot: int) -> int:
+        """Pick the decode-role group that takes ``src_slot``'s KV.
+
+        ``router="load"``: the mirror-capable candidate with the fewest
+        pages mapped-or-in-limbo (limbo pages are claims the group
+        already owes), ties to the lowest group id.  ``router="rr"``:
+        the first mirror-capable candidate at/after a round-robin
+        cursor.  ``_can_admit_next`` proved a candidate exists before
+        the admission started, so exhaustion here is a scheduler bug —
+        surfaced as a typed ``PagePoolExhausted``.
+        """
+        alloc = self.cache.allocator
+        cands = [g for g in self._decode_group_ids
+                 if alloc.can_migrate(src_slot, g)]
+        if not cands:
+            raise PagePoolExhausted(
+                f"migration of slot {src_slot}: no decode group can "
+                "mirror its page placement (admission pre-check raced "
+                "the allocator — scheduler bug)")
+        if self.ecfg.router == "rr":
+            dgs = self._decode_group_ids
+            n = len(dgs)
+            for k in range(n):
+                g = dgs[(self._rr_next + k) % n]
+                if g in cands:
+                    self._rr_next = (self._rr_next + k + 1) % n
+                    return g
+        return min(cands, key=lambda g: (alloc.pages_in_use_by_group(g)
+                                         + alloc.limbo_pages_in_group(g),
+                                         g))
+
+    def _admit_ready(self, P_len: int) -> bool:
+        """Exact can-this-admission-finish pre-check for a ``P_len``
+        prompt against the allocator's CURRENT state.
+
+        Colocated: limbo-aware ``can_admit``.  Disaggregated, three
+        legs: a prefill-role group can take the prompt, the slot
+        ``alloc`` would pick can place its pages (simulated placement),
+        and some decode-role group can MIRROR that placement per shard
+        and has a free slot.  Admission only starts when the whole
+        prefill -> migrate chain is guaranteed, so the router never has
+        to unwind a prefill — a starved target keeps the request
+        queued, which IS the re-queue path.
+        """
+        alloc = self.cache.allocator
+        if not self.ecfg.disagg:
+            return alloc.can_admit(P_len)
+        if not alloc.can_admit(P_len, groups=self._prefill_group_ids):
+            return False
+        src = alloc.peek_alloc(P_len, groups=self._prefill_group_ids)
+        if src is None:
+            return False
+        cnt = alloc.placement_counts(alloc.group_of(src),
+                                     alloc.pages_needed(P_len))
+        if cnt is None:
+            return False
+        return any(alloc.can_place_mirror(g, cnt)
+                   for g in self._decode_group_ids)
+
+    def _can_admit_next(self) -> bool:
+        """Admission gate for the queue head — limbo-aware.
+
+        ``can_admit`` counts limbo pages as UNAVAILABLE.  The old gate
+        checked the free list alone, so an admit could claim the last
+        fresh pages while limbo still owed pages to the pipeline — the
+        very next ``ensure`` then starved mid-flight: a typed
+        ``PagePoolExhausted`` with ``preempt=False``, needless
+        preemption churn / pipeline-drain bubbles with the default
+        rescue path.  Deferring instead is cheap and live: every tick
+        commits at least down to ``async_depth``, so limbo pages rejoin
+        their free deques within ``async_depth`` ticks and the queue
+        head admits as soon as the pool genuinely has room (an
+        ``after_flush`` counterfactual is available on
+        ``SlotAllocator.can_admit`` for schedulers that would rather
+        trade the overlap bubble for earlier admission).
+        """
+        _, _, prompt = self._entry_parts(self._queue[0])
+        return self._admit_ready(len(prompt))
+
     # -- faults / graceful degradation -------------------------------------
 
     def preempt_slot(self, slot: int, kind: str = "preempt"):
@@ -655,18 +884,42 @@ class ServingEngine:
         self._queue.appendleft(st.req)
         self._emit("on_preempt", st.req.rid, kind)
 
+    def _suspend_entry(self, st: _Slot):
+        """Queue entry preserving ``st``'s committed work where the
+        prefill path can re-ingest it: a ``_Resume`` carrying the
+        committed tokens when ``prompt + committed`` still fits the
+        prefill window (and, for recurrent families, lands on a valid
+        exact-length bucket and a group can hold its pages) — otherwise
+        the old restart-from-scratch ``Request``.  Greedy identity holds
+        either way; only the work redone differs."""
+        committed = list(st.out)
+        if committed:
+            L = len(st.req.prompt) + len(committed)
+            alloc = self.cache.allocator
+            if (L <= self.prefill_len
+                    and alloc.pages_needed(L) <= alloc.pages_per_group
+                    and (not self._has_state
+                         or L % self.plan.tp_size == 0)):
+                return _Resume(st.req, committed)
+        return st.req
+
     def suspend(self) -> list:
         """Simulated host preemption: drain the pipeline, snapshot every
         pending request, and release all slots + pages.
 
-        Returns the requests still owed output — mid-generation slots in
+        Returns the entries still owed output — mid-generation slots in
         admission order, then the untouched queue — for ``resume``.
-        Mid-generation requests restart from scratch on resume (greedy
-        token identity makes the interruption invisible in the output);
-        requests that FINISHED during the drain retire normally and are
-        not suspended.  After this the engine holds no device-side
-        request state: pages are back in the pool and the chained token
-        feed is reset, so the caller may checkpoint, migrate, or simply
+        Mid-generation requests are snapshotted WORK-PRESERVING: the
+        tokens committed so far ride along as a ``_Resume`` entry and
+        re-admission prefills ``prompt + committed`` instead of
+        regenerating it token by token (falling back to
+        restart-from-scratch only when the combined length no longer
+        fits the prefill path — see ``_suspend_entry``).  Greedy token
+        identity to the uninterrupted run holds in both modes; requests
+        that FINISHED during the drain retire normally and are not
+        suspended.  After this the engine holds no device-side request
+        state: pages are back in the pool and the chained token feed is
+        reset, so the caller may checkpoint, migrate, or simply
         ``resume`` in place.
         """
         self.flush()
@@ -676,7 +929,7 @@ class ServingEngine:
             st = self._slots[i]
             self.cache.evict(i)
             self._slots[i] = None
-            reqs.append(st.req)
+            reqs.append(self._suspend_entry(st))
         self._emit("on_suspend", [r.rid for r in reqs])
         self._tok_pending.clear()
         self._tok_dirty.clear()
@@ -731,8 +984,7 @@ class ServingEngine:
         verify) step without waiting for its tokens.  Returns True iff a
         device step was dispatched (its results surface at a later
         ``commit()``)."""
-        while self._queue and self.cache.allocator.can_admit(
-                len(self._queue[0].prompt)):
+        while self._queue and self._can_admit_next():
             self._admit(self._queue.popleft())
         if self.spec_k > 0:
             # drafting reads committed tokens: join the pipeline first
@@ -1070,6 +1322,8 @@ class ServingEngine:
         self.spec_verifies = 0
         self.preemptions = 0
         self.suspends = 0
+        self.migrations = 0
+        self.migrated_wire_bytes = 0
         # the pool high-water mark is a stat too: warmup's throwaway
         # admission must not overstate the measured run's peak
         self.cache.peak_pages_in_use = self.cache.allocator.pages_in_use

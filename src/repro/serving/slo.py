@@ -93,7 +93,10 @@ class StepEvent:
     pages_in_use: int
     pages_in_limbo: int
     wire_bytes: float                # total die-to-die bytes the tick's
-    #                                  device step moved (0 if unknown)
+    #                                  device step moved (0 if unknown),
+    #                                  INCLUDING any KV migration below
+    mig_bytes: float = 0.0           # disagg KV-migration bytes folded
+    #                                  into this tick's wire_bytes
 
 
 @dataclasses.dataclass
@@ -129,9 +132,12 @@ class SLOMonitor:
         self.steps: List[StepEvent] = []
         self.preemptions = 0
         self.suspends = 0
+        self.migrations = 0
+        self.migrated_bytes = 0.0
         self._t_last: Optional[float] = None
         self._tokens_last = 0
         self._steps_last = 0
+        self._pending_mig_bytes = 0.0
 
     # -- engine observer hooks (duck-typed; all optional) ------------------
 
@@ -183,6 +189,18 @@ class SLOMonitor:
                 rec.t_first = rec.t_finish = None
                 rec.n_tokens = 0
 
+    def on_migrate(self, rid, src_group: int, dst_group: int,
+                   wire_bytes: int):
+        """Disaggregated KV handoff: ``wire_bytes`` moved from the
+        prefill group to the decode group for ``rid``.  Migrations fire
+        during admission, between ticks — the bytes are held pending and
+        folded into the NEXT ``StepEvent``'s ``wire_bytes`` (and
+        surfaced separately as ``mig_bytes``) so the EMIO co-simulation
+        prices them with the step that paid for them."""
+        self.migrations += 1
+        self.migrated_bytes += wire_bytes
+        self._pending_mig_bytes += wire_bytes
+
     # -- per-tick recorder -------------------------------------------------
 
     def on_step(self, engine):
@@ -195,12 +213,15 @@ class SLOMonitor:
         d_steps = engine.decode_steps - self._steps_last
         self._steps_last = engine.decode_steps
         alloc = engine.cache.allocator
+        mig, self._pending_mig_bytes = self._pending_mig_bytes, 0.0
         self.steps.append(StepEvent(
             t=now, dt=dt, kind=kind, tokens=max(d_tokens, 0),
             queue_depth=engine.queue_depth, active=engine.num_active,
             pages_in_use=alloc.pages_in_use,
             pages_in_limbo=alloc.pages_in_limbo,
-            wire_bytes=self.wire_bytes_per_step.get(kind, 0.0) * d_steps))
+            wire_bytes=self.wire_bytes_per_step.get(kind, 0.0) * d_steps
+            + mig,
+            mig_bytes=mig))
 
     # -- reductions --------------------------------------------------------
 
@@ -259,6 +280,12 @@ class SLOMonitor:
                 "preemptions": self.preemptions,
                 "suspends": self.suspends,
             },
+            "migration": {
+                "count": self.migrations,
+                "kb_total": self.migrated_bytes / 1e3,
+                "kb_per_request": (self.migrated_bytes / 1e3
+                                   / max(len(fin), 1)),
+            },
         }
 
     def per_class_report(self) -> dict:
@@ -287,7 +314,7 @@ class SLOMonitor:
                  "tokens": s.tokens, "queue_depth": s.queue_depth,
                  "active": s.active, "pages_in_use": s.pages_in_use,
                  "pages_in_limbo": s.pages_in_limbo,
-                 "wire_bytes": s.wire_bytes}
+                 "wire_bytes": s.wire_bytes, "mig_bytes": s.mig_bytes}
                 for s in self.steps]
 
     def write_trace(self, path: str):

@@ -329,7 +329,7 @@ def emio_cost_from_trace(steps: Sequence[dict],
     """
     cfg = cfg or NocConfig()
     nc = max(1, cfg.boundary_cores)
-    cycles = energy = 0.0
+    cycles = energy = mig_bytes = 0.0
     tokens = 0
     for s in steps:
         pb = float(s.get("wire_bytes", 0.0))
@@ -337,6 +337,9 @@ def emio_cost_from_trace(steps: Sequence[dict],
             cycles += math.floor(pb / nc) * cfg.cycles_ser + pb
             energy += pb * cfg.e_d2d
         tokens += int(s.get("tokens", 0))
+        # disagg KV migrations are already folded into wire_bytes (and
+        # thus priced above); surface their share for the report
+        mig_bytes += float(s.get("mig_bytes", 0.0))
     return {
         "steps": len(steps),
         "tokens": tokens,
@@ -345,4 +348,5 @@ def emio_cost_from_trace(steps: Sequence[dict],
         "e_emio": energy,
         "emio_cycles_per_token": cycles / max(tokens, 1),
         "e_emio_per_token": energy / max(tokens, 1),
+        "mig_bytes": mig_bytes,
     }

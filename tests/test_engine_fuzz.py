@@ -324,6 +324,70 @@ def test_hybrid_family_mixes_paged_kv_and_slot_major_state():
     assert alloc.pages_in_use == 0 and (alloc.block_table == -1).all()
 
 
+_JAMBA = None
+
+
+def _jamba_engine():
+    """Cached hybrid-family (attention + mamba) engine on a (1, 1) mesh."""
+    global _JAMBA
+    if _JAMBA is None:
+        import jax
+        import jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.configs.base import ShapeCell
+        from repro.configs.reduced import reduced
+        from repro.launch import specs as SP, train as TR
+        from repro.launch.mesh import make_mesh
+        from repro.serving import EngineConfig, ServingEngine
+
+        mesh = make_mesh((1, 1), ("data", "model"))
+        cfg = reduced(get_config("jamba-1.5-large-398b",
+                                 hnn_mode="ann")).replace(
+            dtype=jnp.float32, codec="none")
+        params = TR.init_sharded_params(
+            cfg, SP.make_plan(cfg, ShapeCell("serve_decode", 32, 2,
+                                             "decode"), mesh),
+            mesh, jax.random.PRNGKey(0))
+        _JAMBA = ServingEngine(cfg, mesh, params, EngineConfig(
+            num_slots=2, max_seq=32, prefill_len=16, page_size=8))
+    return _JAMBA
+
+
+def test_recurrent_short_prompts_use_exact_length_buckets():
+    """Regression for the prefill-length bug (PR-8): recurrent-state
+    families used to reject any prompt whose length differed from
+    ``prefill_len`` (right-padding a recurrent scan corrupts the carried
+    state, so the engine demanded exact length — and short prompts were
+    simply inadmissible).  The fix prefills through lazily compiled
+    exact-length buckets: any ``prompt_len % tp_size == 0`` admits, each
+    distinct length compiles once, and outputs are batch-composition
+    independent."""
+    from repro.serving import Request
+    eng = _jamba_engine()
+    assert eng.cache.state_bytes_per_slot() > 0    # really recurrent
+    rng = np.random.RandomState(7)
+    lens = [4, 10, 16, 4]          # pre-fix: ValueError for 4 and 10
+    reqs = [Request(rid=i, prompt=list(rng.randint(0, VOCAB, n)),
+                    max_new_tokens=5) for i, n in enumerate(lens)]
+
+    def clone(r):
+        return Request(rid=r.rid, prompt=r.prompt,
+                       max_new_tokens=r.max_new_tokens)
+
+    res = eng.run([clone(r) for r in reqs])
+    assert set(res) == set(range(len(lens)))
+    # one bucket per distinct length (16 is the eagerly built default);
+    # a repeated length recompiles nothing
+    assert set(eng._prefill_buckets) == {4, 10, 16}
+    # batch composition cannot leak: solo runs reuse the cached buckets
+    # and must reproduce the batched streams token for token
+    for r in reqs:
+        assert eng.run([clone(r)])[r.rid] == res[r.rid], r.rid
+    alloc = eng.cache.allocator
+    assert alloc.pages_in_use == 0 and alloc.pages_in_limbo == 0
+    assert (alloc.block_table == -1).all()
+
+
 def test_page_pool_exhaustion_is_typed_and_pool_bound():
     """``PagePoolExhausted`` fires when (and only when) the PAGE POOL is
     the binding limit: slots are still free, but a live slot's growth

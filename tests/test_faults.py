@@ -208,6 +208,108 @@ def test_suspend_resume_token_identity():
     eng.reset_stats()
 
 
+def test_suspend_preserves_committed_work():
+    """``suspend()`` is work-preserving (the PR-8 bugfix): a
+    mid-generation slot's committed tokens ride the snapshot as a
+    ``_Resume`` entry and re-admission prefills ``prompt + committed``
+    instead of regenerating token by token.  Outputs stay greedy-
+    identical to an uninterrupted run AND ``tokens_generated`` equals
+    the total delivered — the restart-from-scratch engine regenerated
+    the pre-suspend tokens, so this count is exactly what the fix
+    stops wasting."""
+    from repro.serving.engine import _Resume
+    # prompts short enough that prompt + committed always fits the
+    # prefill window: every active slot must snapshot work-preserving
+    schedule = [(6, 10), (4, 8), (5, 9), (6, 7)]
+    eng = _engine()
+    ref = _reference(schedule)
+    eng.reset_stats()
+    for r in _reqs(schedule):
+        eng.submit(_clone(r))
+    results = {}
+    for _ in range(5):
+        for req, out in eng.step():
+            results[req.rid] = out
+    snap = eng.suspend()
+    resumed = [e for e in snap if isinstance(e, _Resume)]
+    assert resumed, "no mid-generation slot carried committed work"
+    assert all(isinstance(e, _Resume) for e in snap
+               if getattr(e, "prior", None) is not None)
+    preserved = sum(len(e.prior) for e in resumed)
+    assert preserved > 0
+    eng.resume(snap)
+    for _ in range(2000):
+        for req, out in eng.step():
+            results[req.rid] = out
+        if eng.idle:
+            break
+    assert results == ref
+    # every token was generated exactly once across the suspension
+    assert eng.tokens_generated == sum(len(v) for v in ref.values())
+    assert eng.suspends == 1
+    _assert_drained(eng)
+    eng.reset_stats()
+
+
+def test_limbo_blind_admission_regression():
+    """Regression for the limbo-blind admission bug (PR-8): the old
+    ``can_admit`` checked the free list alone, so an admit could claim
+    the last fresh pages while the deferred-free limbo still owed pages
+    to the pipeline — the very next ``ensure`` starved mid-flight.  On
+    this exact trace the pre-fix engine raises ``PagePoolExhausted``
+    with ``preempt=False`` (and burns a pipeline-drain bubble on the
+    rescue path otherwise); the limbo-aware gate defers the admission
+    one tick and the run completes preemption-free with identical
+    tokens."""
+    from repro.serving import (EngineConfig, Request, ServingEngine,
+                               SlotAllocator)
+    cfg, mesh, params = _model()
+    rng = np.random.RandomState(0)
+    A = Request(rid=0, prompt=list(rng.randint(0, 64, 6)),
+                max_new_tokens=6)
+    B = Request(rid=1, prompt=list(rng.randint(0, 64, 4)),
+                max_new_tokens=2)
+    C = Request(rid=2, prompt=list(rng.randint(0, 64, 6)),
+                max_new_tokens=2)
+    kw = dict(num_slots=3, max_seq=24, prefill_len=8, page_size=8)
+
+    def drive(ecfg):
+        e = ServingEngine(cfg, mesh, params, ecfg)
+        e.submit(_clone(A)); e.submit(_clone(B))
+        res = {}
+        for _ in range(2):               # B retires at tick 2's commit:
+            for r, o in e.step():        # its page parks in limbo while
+                res[r.rid] = o           # tick 2's step is in flight
+        e.submit(_clone(C))              # 1 fresh page left + 1 in limbo
+        for _ in range(60):
+            for r, o in e.step():
+                res[r.rid] = o
+            if e.idle:
+                break
+        assert e.idle
+        return res, e
+
+    ref, _ = drive(EngineConfig(**kw, num_pages=9))      # roomy pool
+    # tight pool, pipelined, no preemption rescue: pre-fix this raised
+    # PagePoolExhausted at tick 3 (C admitted against the limbo page)
+    res, eng = drive(EngineConfig(**kw, num_pages=3, async_depth=1,
+                                  preempt=False))
+    assert res == ref
+    assert eng.preemptions == 0
+    # allocator-level statement of the same fix: limbo pages never
+    # count toward admission (pre-fix can_admit(24) was True here)
+    a = SlotAllocator(num_slots=2, max_seq=32, page_size=8, num_pages=4)
+    s = a.alloc(8)
+    a.note_dispatch()                    # a step is in flight...
+    a.free(s)                            # ...so this page parks in limbo
+    assert a.pages_in_limbo == 1
+    assert not a.can_admit(24)           # 3 free pages, 1 owed: refuse
+    assert a.can_admit(16)               # 2 pages genuinely available
+    assert a.can_admit(24, after_flush=True)   # the drain counterfactual
+    a.note_commit()
+    assert a.can_admit(24)               # limbo drained: fresh again
+
+
 def test_preempt_slot_on_free_slot_is_typed():
     eng = _engine()
     with pytest.raises(ValueError):

@@ -243,9 +243,58 @@ def test_page_allocator_group_partitioning():
         a.alloc(1)                       # slots 1 and 3 free, pools empty
 
 
+def test_page_allocator_cross_group_migration_mirrors_placement():
+    """``migrate_slot`` moves a slot's mapping to a fresh slot of another
+    group with SHARD-MIRRORED placement: destination shard s holds the
+    migrated page at the same compacted-list position and position
+    offset as source shard s (the device handoff is one ppermute, no
+    re-indexing), the source pages go through the ordinary free/limbo
+    machinery, and no page leaks or double-maps across the move."""
+    from repro.serving import SlotAllocator
+    a = SlotAllocator(num_slots=4, max_seq=32, page_size=8, num_pages=32,
+                      num_groups=2, shards_per_group=2)
+    s = a.alloc(20)                                      # 3 pages, group 0
+    src_loc = a.page_list_loc[s].copy()
+    src_pos = a.page_list_pos[s].copy()
+    src_cnt = [int(c) for c in a._shard_count[s]]
+    assert a.can_migrate(s, 1) and not a.can_migrate(s, 0)
+    assert a.placement_counts(1, 3) is not None
+    assert a.can_place_mirror(1, src_cnt)
+    a.note_dispatch()                    # a step is in flight: the freed
+    d = a.migrate_slot(s, 1)             # source pages must limbo
+    assert a.group_of(d) == 1 and a._len[s] == 0
+    assert a.pages_in_limbo == 3 and a.pages_in_use == 3
+    assert (a.page_list_loc[d] == src_loc).all()   # mirrored lists
+    assert (a.page_list_pos[d] == src_pos).all()
+    assert [int(c) for c in a._shard_count[d]] == src_cnt
+    lo = a.pages_per_group
+    used = a.block_table[d][a.block_table[d] >= 0]
+    assert all(lo <= p < 2 * lo for p in used)     # dst group's range
+    a.note_commit()
+    assert a.pages_in_limbo == 0
+    a.free(d)
+    assert a.pages_in_use == 0 and (a.block_table == -1).all()
+
+
+def test_page_allocator_peek_alloc_predicts_alloc():
+    """``peek_alloc`` returns exactly the slot ``alloc`` then claims (or
+    None exactly when ``alloc`` would raise) — the disagg router's
+    pre-check contract."""
+    from repro.serving import SlotAllocator
+    from repro.serving.errors import PagePoolExhausted
+    a = SlotAllocator(num_slots=4, max_seq=32, page_size=8, num_pages=8,
+                      num_groups=2)
+    assert a.peek_alloc(16) == a.alloc(16)
+    assert a.peek_alloc(16, groups=(1,)) == a.alloc(16, groups=(1,))
+    assert a.peek_alloc(32) is None      # no group has 4 pages left
+    with pytest.raises(PagePoolExhausted):
+        a.alloc(32)
+    assert a.peek_alloc(16, groups=(0,)) == a.alloc(16, groups=(0,))
+
+
 @pytest.mark.slow
 @settings(max_examples=60, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 6), st.integers(1, 40)),
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(1, 40)),
                 min_size=1, max_size=60),
        st.integers(1, 3))
 def test_fuzz_page_allocator_never_leaks_or_double_maps(ops, groups):
@@ -258,7 +307,11 @@ def test_fuzz_page_allocator_never_leaks_or_double_maps(ops, groups):
     state-neutral, (e) limbo empty whenever no step is outstanding.
     The preempt op (6) frees the YOUNGEST live slot mid-epoch — the
     allocator-level footprint of the engine's pool-pressure preemption
-    — and must be page-clean like any other free."""
+    — and must be page-clean like any other free.  The migrate op (7)
+    moves a live slot to another group (the disaggregated prefill ->
+    decode handoff): the destination mapping must mirror per shard, the
+    source pages must limbo/free exactly like an evict, and a refused
+    migration (no mirror capacity) must be state-neutral."""
     from repro.serving import SlotAllocator
     from repro.serving.errors import (CacheOverflowError,
                                       PagePoolExhausted, SlotsExhausted)
@@ -319,6 +372,15 @@ def test_fuzz_page_allocator_never_leaks_or_double_maps(ops, groups):
                 a.free(s)                # (its pages limbo mid-epoch)
                 del live[s]
                 order.pop()
+            elif op == 7 and live and groups > 1:
+                s = sorted(live)[arg % len(live)]
+                dst = (a.group_of(s) + 1 + arg) % groups
+                if dst != a.group_of(s):
+                    expect = a.can_migrate(s, dst)
+                    d = a.migrate_slot(s, dst)   # raises iff not expect
+                    assert expect and a.group_of(d) == dst
+                    live[d] = live.pop(s)
+                    order[order.index(s)] = d    # age travels with it
         except (SlotsExhausted, PagePoolExhausted, CacheOverflowError):
             pass                         # typed refusals must not mutate
         check()
@@ -503,3 +565,31 @@ def test_speculative_decoding_parity_and_acceptance():
 def test_speculative_recurrent_fallback():
     """Recurrent-state families force spec_k=0 and still serve."""
     run("serving_spec_recurrent_fallback")
+
+
+def test_disagg_prefill_decode_parity_on_mesh():
+    """Tentpole invariant: the disaggregated prefill/decode engine (dp
+    group 0 prefills, group 1 decodes, KV handed over in one coded
+    ppermute) is token-identical to the colocated engine for the fp and
+    pow2-absmax int8 wires, for both codecs, through the async +
+    speculative pipeline, and for a hybrid family whose mamba state rows
+    migrate alongside the paged KV."""
+    out = run("serving_disagg_parity", timeout=580)
+    assert out.count("serving disagg parity OK") == 3
+
+
+@pytest.mark.slow
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2), st.integers(0, 1),
+       st.sampled_from(["none", "spike_fused"]),
+       st.sampled_from(["fp", "coded"]),
+       st.integers(0, 2 ** 16))
+def test_fuzz_disagg_matches_colocated(spec_k, async_depth, codec,
+                                       kv_wire, seed):
+    """Hypothesis sweep of disagg-vs-colocated greedy identity across
+    spec_k x async_depth x codec x kv_wire on seed-derived random
+    schedules (subprocess per draw: the 8-device mesh needs its own
+    process)."""
+    out = run("serving_disagg_fuzz", str(spec_k), str(async_depth),
+              codec, kv_wire, str(seed), timeout=580)
+    assert "disagg fuzz OK" in out
