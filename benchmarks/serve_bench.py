@@ -21,6 +21,20 @@ the mean accepted draft length: the verify step multiplies the
 decode-boundary traffic by K+1, which is exactly the term the coded
 wire absorbs (vwireKB/tok already divides by the measured acceptance).
 
+``--drafter`` picks who proposes those K tokens — ``ngram`` (host
+prompt-lookup) or ``heads`` (learned draft heads living on device; the
+verify step emits the next verify feed itself, so the dispatch chain
+never joins the host) — or sweeps a comma list.  Before the first
+``heads`` engine of each codec the bench trains the heads by
+self-distillation: the trunk greedily rolls out the bench prompts, and
+``--draft-train-steps`` heads-only steps fit those rollouts (the trunk
+is random-init here, so its own rollouts are the ONLY distribution the
+heads can usefully learn).  A drafter sweep shares one trunk init per
+codec, so both drafters must emit identical greedy tokens (asserted);
+acceptance and tokens/s are then the drafters' only degrees of freedom.
+``--lowmatch`` draws every prompt without repeated tokens — the
+prompt-lookup drafter's worst case and the learned heads' showcase.
+
 With ``--async-depth 1`` the engine runs the dispatch/commit pipeline
 (step t+1 launched before step t's tokens are synced).  The run is
 driven step-by-step so every scheduler tick's host wall time is
@@ -116,7 +130,21 @@ def main():
                          "'coded' (pow2-absmax int8, exact roundtrip) "
                          "or 'fp'")
     ap.add_argument("--repetitive", action="store_true",
-                    help="cyclic prompts (the drafter's best case)")
+                    help="cyclic prompts (the n-gram drafter's best case)")
+    ap.add_argument("--lowmatch", action="store_true",
+                    help="prompts without repeated tokens (the n-gram "
+                         "drafter's worst case; the learned heads' "
+                         "showcase)")
+    ap.add_argument("--drafter", default="ngram",
+                    help="speculative drafter: 'ngram' (host prompt-"
+                         "lookup), 'heads' (device-side learned draft "
+                         "heads; self-distilled here before serving), "
+                         "or a comma list to sweep both — results are "
+                         "then keyed <codec>/<drafter> and the sweep "
+                         "asserts identical greedy streams")
+    ap.add_argument("--draft-train-steps", type=int, default=200,
+                    help="heads-only self-distillation steps per codec "
+                         "when --drafter includes 'heads'")
     ap.add_argument("--out", default="",
                     help="write a bench_serve/v1 BENCH_serve.json here")
     ap.add_argument("--trace-out", default="",
@@ -148,6 +176,11 @@ def main():
         prompts = [(list(rng.randint(0, 256, period))
                     * args.prompt_len)[:args.prompt_len]
                    for _ in range(args.requests)]
+    elif args.lowmatch:
+        # every prompt token distinct: prompt-lookup n-grams never match
+        prompts = [list(rng.choice(256, min(args.prompt_len, 256),
+                                   replace=False))
+                   for _ in range(args.requests)]
     else:
         prompts = [list(rng.randint(0, 256, args.prompt_len))
                    for _ in range(args.requests)]
@@ -161,24 +194,82 @@ def main():
     for m in disagg_modes:
         if m not in ("on", "off"):
             raise SystemExit(f"--disagg must be on/off, got {m!r}")
-    pairs = [(c, k, d) for c in codecs for k in kernels
-             for d in disagg_modes]
+    drafters = args.drafter.split(",")
+    for m in drafters:
+        if m not in ("ngram", "heads"):
+            raise SystemExit(f"--drafter must be ngram/heads, got {m!r}")
+    if "heads" in drafters and args.spec_k < 1:
+        raise SystemExit("--drafter heads needs --spec-k >= 1")
+
+    def distill_heads(cfg, params):
+        """Train draft heads on the trunk's own greedy rollouts.
+
+        The bench trunk is random-init, so the heads' training signal
+        must come from the trunk itself (Medusa-style self-
+        distillation): serve the bench prompts once without
+        speculation, fit the heads on prompt+rollout for a few steps,
+        and return trunk+heads as ONE tree.  The trunk flows through
+        the heads-only step unchanged, so every engine in the sweep
+        (ngram engines just ignore the heads subtree) shares bit-
+        identical trunk weights.
+        """
+        from repro.optim import adamw
+        eng = ServingEngine(cfg, mesh, params, EngineConfig(
+            num_slots=args.slots, max_seq=max_seq,
+            prefill_len=args.prompt_len, page_size=args.page_size,
+            num_pages=args.num_pages))
+        out = eng.run([Request(rid=i, prompt=p, max_new_tokens=args.gen)
+                       for i, p in enumerate(prompts)])
+        gl = min(len(out[i]) for i in range(len(prompts)))
+        seqs = np.asarray([list(p) + list(out[i])[:gl]
+                           for i, p in enumerate(prompts)], np.int32)
+        S = ((seqs.shape[1] - 1) // tp) * tp
+        B = max(dp, (len(prompts) // dp) * dp)
+        seqs = np.resize(seqs, (B, seqs.shape[1]))
+        batch = {"tokens": seqs[:, :S], "labels": seqs[:, 1:S + 1]}
+        plan = SP.make_plan(cfg, ShapeCell("draft_distill", S, B,
+                                           "train"), mesh)
+        n = max(args.draft_train_steps, 1)
+        step, _, _, _ = TR.make_draft_head_train_step(
+            cfg, plan, mesh, args.spec_k,
+            opt_cfg=adamw.AdamWConfig(lr=3e-2, warmup_steps=min(5, n),
+                                      total_steps=n))
+        params = dict(params)
+        params["draft_heads"] = TR.init_draft_head_params(
+            cfg, plan, mesh, jax.random.PRNGKey(1), args.spec_k)
+        opt = adamw.init_opt_state(params["draft_heads"])
+        m = {}
+        for _ in range(args.draft_train_steps):
+            params, opt, m = step(params, opt, batch)
+        acc = float(m["draft_acc"]) if m else 0.0
+        print(f"# distilled {args.spec_k} draft heads "
+              f"({args.draft_train_steps} steps, "
+              f"train draft_acc={acc:.3f})", file=sys.stderr)
+        return params
+
+    pairs = [(c, k, d, dr) for c in codecs for k in kernels
+             for d in disagg_modes for dr in drafters]
     models = {}
-    for codec, kernel, disagg in pairs:
+    for codec, kernel, disagg, drafter in pairs:
         key = codec if len(kernels) == 1 else f"{codec}/{kernel}"
         if len(disagg_modes) > 1:
             key = f"{key}/disagg-{disagg}"
+        if len(drafters) > 1:
+            key = f"{key}/{drafter}"
         if codec not in models:
             hnn = "ann" if codec == "none" else "hnn"
             cfg = reduced(get_config(args.arch, hnn_mode=hnn)).replace(
                 codec=codec)
             cell = ShapeCell("serve_decode", max_seq, args.slots, "decode")
             plan = SP.make_plan(cfg, cell, mesh)
-            # one param init shared across the kernel sweep: the two
-            # attention paths must generate identical tokens, so only
-            # step latency may move between them
-            models[codec] = (cfg, TR.init_sharded_params(
-                cfg, plan, mesh, jax.random.PRNGKey(0)))
+            # one param init shared across the kernel/drafter sweep:
+            # the attention paths and drafters must generate identical
+            # tokens, so only step latency / acceptance may move
+            params0 = TR.init_sharded_params(cfg, plan, mesh,
+                                             jax.random.PRNGKey(0))
+            if "heads" in drafters:
+                params0 = distill_heads(cfg, params0)
+            models[codec] = (cfg, params0)
         cfg, params = models[codec]
         ecfg = EngineConfig(num_slots=args.slots, max_seq=max_seq,
                             prefill_len=args.prompt_len,
@@ -188,7 +279,8 @@ def main():
                             async_depth=args.async_depth,
                             attn_kernel=kernel,
                             disagg=(disagg == "on"),
-                            kv_wire=args.kv_wire)
+                            kv_wire=args.kv_wire,
+                            drafter=drafter)
         reqs = [Request(rid=i, prompt=p, max_new_tokens=args.gen)
                 for i, p in enumerate(prompts)]
 
@@ -221,11 +313,13 @@ def main():
         dt = ts[-1] - ts[0]
         toks = engine.tokens_generated
         assert len(results) == args.requests
-        # disagg is a placement change, not a decode change: the token
-        # streams must be bit-identical to the colocated run
+        # disagg is a placement change and the drafter is a proposal
+        # change, never a decode change: greedy token streams must be
+        # bit-identical across both sweeps
         ref_streams = codec_streams.setdefault((codec, kernel), results)
         assert results == ref_streams, (
-            f"{key}: disagg token streams diverge from colocated")
+            f"{key}: token streams diverge across the disagg/drafter "
+            f"sweep")
         p50, p95, p99 = np.percentile(np.diff(np.asarray(ts)) * 1e6,
                                       [50, 95, 99])
         if baseline_tokens is None:
@@ -239,8 +333,10 @@ def main():
         if engine.spec_k > 0:
             mal = engine.mean_accepted_len
             _, vper_tok = engine.verify_wire_stats(mal)
-            extra = (f" spec_k={engine.spec_k} accepted={mal:.2f} "
-                     f"vwireKB/tok={vper_tok/1e3:.2f}")
+            extra = (f" drafter={drafter} spec_k={engine.spec_k} "
+                     f"accepted={mal:.2f} "
+                     f"vwireKB/tok={vper_tok/1e3:.2f} "
+                     f"pipelined={engine.pipelined_dispatches}")
         if disagg == "on":
             mig_kb_req = (engine.migrated_wire_bytes / 1e3
                           / max(engine.migrations, 1))
@@ -265,6 +361,9 @@ def main():
         rep["mig_kb_per_req"] = (engine.migrated_wire_bytes / 1e3
                                  / max(engine.migrations, 1)
                                  if engine.migrations else 0.0)
+        if engine.spec_k > 0:
+            rep["drafter"] = drafter
+            rep["pipelined_dispatches"] = engine.pipelined_dispatches
         bench_results[key] = rep
         if args.trace_out:
             path = args.trace_out
@@ -283,7 +382,9 @@ def main():
             "page_size": args.page_size, "num_pages": args.num_pages,
             "spec_k": args.spec_k, "async_depth": args.async_depth,
             "attn_kernel": args.attn_kernel, "disagg": args.disagg,
-            "kv_wire": args.kv_wire,
+            "kv_wire": args.kv_wire, "drafter": args.drafter,
+            "lowmatch": args.lowmatch,
+            "draft_train_steps": args.draft_train_steps,
         }
         write_bench(args.out, make_bench_payload(run_cfg, bench_results))
         print(f"# BENCH_serve.json: {args.out}", file=sys.stderr)

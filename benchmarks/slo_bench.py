@@ -52,6 +52,11 @@ def main():
                          "preemption)")
     ap.add_argument("--spec-k", type=int, default=0)
     ap.add_argument("--async-depth", type=int, default=0)
+    ap.add_argument("--drafter", default="ngram",
+                    help="speculative drafter when --spec-k > 0: 'ngram' "
+                         "or 'heads' (device-side draft heads; identity-"
+                         "init here — this bench measures latency under "
+                         "load/faults, acceptance lives in serve_bench)")
     ap.add_argument("--disagg", action="store_true",
                     help="disaggregated prefill/decode (needs dp>=2, "
                          "e.g. --mesh 2x2): migration bytes land in the "
@@ -147,11 +152,15 @@ def main():
                             num_pages=args.num_pages,
                             spec_k=args.spec_k,
                             async_depth=args.async_depth,
-                            disagg=args.disagg, kv_wire=args.kv_wire)
+                            disagg=args.disagg, kv_wire=args.kv_wire,
+                            drafter=args.drafter)
         plan = SP.make_plan(cfg, ShapeCell("serve_decode", max_seq,
                                            args.slots, "decode"), mesh)
         params = TR.init_sharded_params(cfg, plan, mesh,
                                         jax.random.PRNGKey(0))
+        if args.drafter == "heads" and args.spec_k > 0:
+            params["draft_heads"] = TR.init_draft_head_params(
+                cfg, plan, mesh, jax.random.PRNGKey(1), args.spec_k)
         engine = ServingEngine(cfg, mesh, params, ecfg)
         engine.warmup(trace.requests[0].req.prompt)
 
@@ -209,7 +218,7 @@ def main():
             "slots": args.slots, "prompt_len": args.prompt_len,
             "gen": args.gen, "page_size": args.page_size,
             "num_pages": args.num_pages, "spec_k": args.spec_k,
-            "async_depth": args.async_depth,
+            "async_depth": args.async_depth, "drafter": args.drafter,
             "disagg": args.disagg, "kv_wire": args.kv_wire,
             "preset": args.preset,
             "horizon_s": args.horizon, "load": args.load,

@@ -4,6 +4,15 @@ Default trains the paper's RWKV LM; pass --arch/--steps/--mesh to scale
 (e.g. --arch qwen1.5-0.5b for a ~100M-class model on real hardware).
 
     PYTHONPATH=src python examples/train_hnn_lm.py --steps 300
+
+Speculative draft heads (``--draft-heads K``) train K frozen-trunk
+heads on the next-k-token objective and checkpoint them alongside the
+trunk — the artifact the serving engine's ``drafter="heads"`` mode
+restores:
+
+    PYTHONPATH=src python examples/train_hnn_lm.py \
+        --arch qwen1.5-0.5b --reduced --draft-heads 2 --steps 50 \
+        --ckpt-dir /tmp/heads_ckpt
 """
 import sys
 

@@ -408,3 +408,20 @@ def serve_verify_input_specs(plan: CellPlan, spec_k: int, page_size: int,
              "bt": bt_sp, "clp": clp_sp, "clo": clo_sp,
              "temp": P(bs), "key": P()}
     return inputs, specs
+
+
+def serve_heads_feed_specs(plan: CellPlan, page_size: int, spec_k: int):
+    """PartitionSpecs for the HEADS-drafter verify feed chain.
+
+    With ``EngineConfig.drafter = "heads"`` the verify step itself emits
+    the next dispatch's inputs — ``vtoken`` [B, spec_k+1] (corrected
+    token + head-argmax drafts) and ``vpos`` [B] (base position advanced
+    by the accepted length) — which the engine chains device-to-device
+    exactly like the async decode token feed (PR 5): no host join sits
+    between verify dispatches.  ``vpos`` shares the ``pos`` layout; it
+    gets its own key because the heads chain stages BOTH arrays fresh
+    only on re-seed (admission / post-suspend), not per dispatch.
+    """
+    specs = serve_feed_specs(plan, page_size, spec_k)
+    specs["vpos"] = specs["pos"]
+    return specs

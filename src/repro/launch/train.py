@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..models import draft_heads as DH
 from ..models import model as M
 from ..models import params as PR
 from ..optim import adamw
@@ -170,6 +171,82 @@ def make_train_step(cfg, plan: CellPlan, mesh, with_optimizer=True,
                        out_specs=(pspecs, opt_specs, mspec),
                        check_vma=False)
     return jax.jit(fn, donate_argnums=(0, 1)), pspecs, opt_specs, bspecs
+
+
+def make_draft_head_train_step(cfg, plan: CellPlan, mesh, num_heads: int,
+                               d_hidden: int = 0,
+                               opt_cfg: adamw.AdamWConfig | None = None):
+    """Frozen-trunk, heads-only train step (the draft-head mode).
+
+    Returns (step_fn, params_specs, opt_specs, batch_specs) with
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``params`` is ONE tree: the trunk plus a ``"draft_heads"`` subtree
+    (see ``models.draft_heads.draft_head_defs``).  Only the heads
+    subtree differentiates — the trunk forward runs under stop_gradient
+    inside ``draft_head_loss`` — and ``opt_state`` covers the heads
+    alone, so the optimizer footprint is O(heads).  The full tree flows
+    through unchanged otherwise, which is what lets the caller's
+    checkpoint loop (runtime.ft.TrainLoop) save trunk + heads together
+    as one path-keyed manifest.
+    """
+    defs, pspecs, _ = shard_params_specs(cfg, plan)
+    hdefs = DH.draft_head_defs(cfg, num_heads, d_hidden)
+    hspecs = PR.specs_tree(hdefs, plan.dp, plan.tp)
+    hpsum = PR.grad_psum_axes(hdefs, plan.dp, plan.tp)
+    pspecs_full = dict(pspecs)
+    pspecs_full["draft_heads"] = hspecs
+    ctx = make_context(plan, "train")
+    _, bspecs = train_input_specs(plan)
+    opt_specs = adamw.opt_state_specs(hspecs)
+
+    def hloss(hp, params, batch):
+        p = dict(params)
+        p["draft_heads"] = hp
+        return DH.draft_head_loss(p, batch, ctx)
+
+    def step(params, opt_state, batch):
+        hp = params["draft_heads"]
+        (loss, metrics), grads = jax.value_and_grad(
+            hloss, has_aux=True)(hp, params, batch)
+
+        def fix(g, axes):
+            for a in axes:
+                g = jax.lax.psum(g, a)
+            return g
+
+        grads = jax.tree.map(fix, grads, hpsum)
+        # heads are replicated and their grads are post-psum identical on
+        # every rank: the global norm is a plain local sum of squares
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32)))
+                             for g in jax.tree.leaves(grads)))
+        hp, opt_state = adamw.apply_updates(
+            hp, grads, opt_state, gnorm=gnorm,
+            cfg=opt_cfg or adamw.AdamWConfig())
+        params = dict(params)
+        params["draft_heads"] = hp
+        metrics = {k: jax.lax.pmean(v, plan.dp + (plan.tp,))
+                   for k, v in metrics.items()}
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    mspec = {k: P() for k in ("loss", "draft_acc", "grad_norm")}
+    fn = jax.shard_map(step, mesh=mesh,
+                       in_specs=(pspecs_full, opt_specs, bspecs),
+                       out_specs=(pspecs_full, opt_specs, mspec),
+                       check_vma=False)
+    return jax.jit(fn, donate_argnums=(0, 1)), pspecs_full, opt_specs, bspecs
+
+
+def init_draft_head_params(cfg, plan: CellPlan, mesh, key, num_heads: int,
+                           d_hidden: int = 0, dtype=None):
+    """Materialize a fresh (identity-init) draft-heads subtree, sharded
+    (i.e. replicated — the defs carry no tp/fsdp dims) on the mesh."""
+    hdefs = DH.draft_head_defs(cfg, num_heads, d_hidden)
+    hspecs = PR.specs_tree(hdefs, plan.dp, plan.tp)
+    host = PR.init_params(hdefs, key, dtype or cfg.dtype)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), hspecs)
+    return jax.device_put(host, shardings)
 
 
 def init_sharded_params(cfg, plan: CellPlan, mesh, key, dtype=None):

@@ -7,6 +7,15 @@
 Wires together: config -> mesh/plan -> sharded init -> AdamW train step
 -> deterministic data pipeline -> fault-tolerant TrainLoop (checkpoint/
 restart, straggler watch, NaN guard, preemption).
+
+``--draft-heads K`` switches to the frozen-trunk draft-head mode
+(``launch.train.make_draft_head_train_step``): K speculative draft
+heads train against the next-k-token objective while the trunk stays
+fixed, the optimizer covers only the heads, and checkpoints carry
+trunk + heads as ONE params tree — exactly what the serving engine's
+``drafter="heads"`` restores.  ``--init-from`` seeds the trunk from an
+existing trunk-only checkpoint first (the usual flow: pretrain the
+trunk, then bolt heads on).
 """
 from __future__ import annotations
 
@@ -40,6 +49,14 @@ def main(argv=None):
     ap.add_argument("--no-resume", action="store_true")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--warmup", type=int, default=30)
+    ap.add_argument("--draft-heads", type=int, default=0,
+                    help="train K frozen-trunk speculative draft heads "
+                         "instead of the trunk (0: normal LM training)")
+    ap.add_argument("--draft-hidden", type=int, default=0,
+                    help="draft-head MLP hidden width (0: d_model // 2)")
+    ap.add_argument("--init-from", default=None,
+                    help="checkpoint dir to seed the TRUNK from before "
+                         "heads-only training (trunk-only manifest)")
     args = ap.parse_args(argv)
 
     from ..configs import get_config
@@ -63,15 +80,35 @@ def main(argv=None):
 
     opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=args.warmup,
                                 total_steps=max(args.steps, 1))
-    step, pspecs, ospecs, _ = TR.make_train_step(cfg, plan, mesh,
-                                                 with_optimizer=True,
-                                                 opt_cfg=opt_cfg)
     params = TR.init_sharded_params(cfg, plan, mesh,
                                     jax.random.PRNGKey(args.seed))
-    opt = adamw.init_opt_state(params)
+    if args.draft_heads > 0:
+        if args.init_from:
+            from ..checkpoint.manager import CheckpointManager
+            tspecs = TR.shard_params_specs(cfg, plan)[1]
+            params, ck_step = CheckpointManager(args.init_from).restore(
+                (params, adamw.init_opt_state(params)),
+                mesh=mesh, specs=(tspecs, adamw.opt_state_specs(tspecs)))
+            params = params[0]
+            print(f"[train] trunk seeded from {args.init_from} "
+                  f"step {ck_step}")
+        step, pspecs, ospecs, _ = TR.make_draft_head_train_step(
+            cfg, plan, mesh, args.draft_heads, args.draft_hidden,
+            opt_cfg=opt_cfg)
+        params["draft_heads"] = TR.init_draft_head_params(
+            cfg, plan, mesh, jax.random.PRNGKey(args.seed + 1),
+            args.draft_heads, args.draft_hidden)
+        opt = adamw.init_opt_state(params["draft_heads"])
+    else:
+        step, pspecs, ospecs, _ = TR.make_train_step(cfg, plan, mesh,
+                                                     with_optimizer=True,
+                                                     opt_cfg=opt_cfg)
+        opt = adamw.init_opt_state(params)
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    mode = (f"draft_heads={args.draft_heads}" if args.draft_heads > 0
+            else "lm")
     print(f"[train] {cfg.name} mode={cfg.hnn_mode} codec={cfg.codec} "
-          f"params={n_params/1e6:.2f}M mesh={mesh.shape}")
+          f"params={n_params/1e6:.2f}M mesh={mesh.shape} train={mode}")
 
     data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                   global_batch=args.batch, seed=args.seed))
@@ -82,9 +119,13 @@ def main(argv=None):
         p, o, m = step(p, o, batch)
         hist.append(m)
         if len(hist) % args.log_every == 0:
-            print(f"  step {len(hist):5d} loss={float(m['loss']):.4f} "
-                  f"occ={float(m['occupancy']):.3f} "
-                  f"pen={float(m['penalty']):.5f}")
+            if "draft_acc" in m:
+                print(f"  step {len(hist):5d} loss={float(m['loss']):.4f} "
+                      f"draft_acc={float(m['draft_acc']):.3f}")
+            else:
+                print(f"  step {len(hist):5d} loss={float(m['loss']):.4f} "
+                      f"occ={float(m['occupancy']):.3f} "
+                      f"pen={float(m['penalty']):.5f}")
         return p, o, m
 
     loop = TrainLoop(logged_step, data,
@@ -98,11 +139,14 @@ def main(argv=None):
     out = {
         "arch": cfg.name, "mode": cfg.hnn_mode,
         "final_loss": metrics[-1]["loss"] if metrics else None,
-        "final_occupancy": metrics[-1]["occupancy"] if metrics else None,
+        "final_occupancy": (metrics[-1].get("occupancy")
+                            if metrics else None),
         "steps": len(metrics), "wall_s": round(dt, 1),
         "straggler_events": loop.straggler_events,
         "nan_skips": loop.nan_skips,
     }
+    if args.draft_heads > 0 and metrics:
+        out["draft_acc"] = metrics[-1].get("draft_acc")
     print("[train] done:", json.dumps(out))
     return out, metrics
 

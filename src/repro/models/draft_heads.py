@@ -1,0 +1,151 @@
+"""Learned draft heads (Medusa/EAGLE-style) for device-side drafting.
+
+H small residual-MLP heads read the trunk's final D-space hidden state —
+the tensor the decode/verify step already computes AND already moves
+through the ``sp_head`` wire roundtrip when tp > 1.  Post-roundtrip that
+hidden is bit-identical on every tp rank, and the head parameters are
+replicated (no tp/fsdp dims), so drafting adds ~zero trunk FLOPs and
+ZERO new collectives: head j's hidden is computed redundantly per rank,
+its local-vocab logits reuse the tp-sharded LM head, and the engine
+turns them into draft tokens with the same distributed argmax the
+sampler uses.  Only accepted tokens ever cross the die boundary.
+
+Head j predicts the token at offset j+1 past the next token (the trunk's
+own argmax is offset 0): a residual MLP ``z_j = h + W2_j silu(W1_j h +
+b1_j)`` with ``W2 = 0`` at init, so an untrained head is exactly the
+identity — its argmax repeats the trunk's next-token argmax, which is a
+safe (garbage-tolerant) draft under longest-prefix acceptance.
+
+Training is frozen-trunk (``launch.train.make_draft_head_train_step``):
+the trunk forward runs under ``stop_gradient``, a next-k-token
+distributed-XE objective trains only the ``"draft_heads"`` subtree, and
+the heads checkpoint alongside the trunk as one params tree (the
+checkpoint manager is path-keyed, so trunk-only checkpoints coexist).
+
+This module is layered below ``repro.serving`` and must not import it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import boundary
+from . import common
+from . import model as M
+from .context import Context
+from .params import pdef
+
+F32 = jnp.float32
+
+
+def draft_head_defs(cfg, num_heads: int, d_hidden: int = 0):
+    """ParamDefs for H stacked residual-MLP draft heads.
+
+    No tp/fsdp dims: the heads replicate on every rank (their input is
+    the post-roundtrip replicated hidden), so grads psum over all mesh
+    axes and serving needs no new weight collectives.  ``w2`` starts at
+    zero: identity heads, safe drafts from step one.
+    """
+    D = cfg.d_model
+    Dh = int(d_hidden) if d_hidden else max(D // 2, 8)
+    return {"w1": pdef(num_heads, D, Dh),
+            "b1": pdef(num_heads, Dh, init="zeros"),
+            "w2": pdef(num_heads, Dh, D, init="zeros")}
+
+
+def num_draft_heads(params) -> int:
+    return int(params["draft_heads"]["w1"].shape[0])
+
+
+def head_hiddens(hp, h):
+    """All heads at once: h [..., D] -> drafted hiddens [..., H, D]."""
+    dt = h.dtype
+    u = jnp.einsum("...d,hdk->...hk", h, hp["w1"].astype(dt))
+    u = jax.nn.silu(u + hp["b1"].astype(dt))
+    return h[..., None, :] + jnp.einsum("...hk,hkd->...hd", u,
+                                        hp["w2"].astype(dt))
+
+
+def head_hidden_one(hp, j: int, h):
+    """Single head j: h [..., D] -> z_j [..., D] (loss-loop friendly)."""
+    dt = h.dtype
+    u = jax.nn.silu(h @ hp["w1"][j].astype(dt) + hp["b1"][j].astype(dt))
+    return h + u @ hp["w2"][j].astype(dt)
+
+
+def _dist_nll(logits_loc, labels_g, ctx: Context):
+    """Distributed XE over the tp-sharded vocab with ALREADY-GATHERED
+    labels [B, S] (the next-k objective shifts labels by j+1 AFTER the
+    seq gather — shifting per-shard would be wrong at shard seams, so
+    ``model.xent_loss`` cannot be reused here).  Returns (nll [B, S],
+    hit [B, S]) where hit flags gold == the global argmax logit.
+    """
+    cfg = ctx.cfg
+    if cfg.final_softcap:
+        logits_loc = common.softcap(logits_loc, cfg.final_softcap)
+    if ctx.tp_size == 1:
+        lse = jax.nn.logsumexp(logits_loc, axis=-1)
+        gold = jnp.take_along_axis(
+            logits_loc, labels_g[..., None], axis=-1)[..., 0]
+        gmax = jnp.max(logits_loc, axis=-1)
+        return lse - gold, (gold >= gmax).astype(F32)
+    V_loc = logits_loc.shape[-1]
+    r = lax.axis_index(ctx.tp)
+    off = r * V_loc
+    m_loc = jnp.max(logits_loc, axis=-1)
+    m = lax.stop_gradient(lax.pmax(lax.stop_gradient(m_loc), ctx.tp))
+    se = lax.psum(jnp.sum(jnp.exp(logits_loc - m[..., None]), -1), ctx.tp)
+    lse = m + jnp.log(se)
+    loc = jnp.clip(labels_g - off, 0, V_loc - 1)
+    gold_p = jnp.take_along_axis(logits_loc, loc[..., None], -1)[..., 0]
+    valid = (labels_g >= off) & (labels_g < off + V_loc)
+    gold = lax.psum(jnp.where(valid, gold_p, 0.0), ctx.tp)
+    return lse - gold, (gold >= m).astype(F32)
+
+
+def draft_head_loss(params, batch, ctx: Context):
+    """Frozen-trunk next-k-token objective.
+
+    batch: tokens/labels [B_loc, S_loc] (labels[t] = token t+1, the
+    standard LM shift).  Head j at position t predicts labels[t + j + 1];
+    the tail j+1 positions of each row are masked.  The trunk forward
+    (embed -> stack -> final norm -> seq gather) runs under
+    ``stop_gradient`` so the backward touches only the heads.
+
+    Returns (loss / dp_size, metrics) — same normalization contract as
+    ``model.forward_loss`` (grads are psum'd over dp for replicated
+    leaves, so each dp rank contributes mean-loss / dp_size).
+    """
+    cfg = ctx.cfg
+    aux = M._make_aux(batch, ctx)
+    x = M.embed_tokens(params, batch["tokens"], ctx)
+    x, _, _, _ = M._run_stack(params, x, ctx, aux)
+    h = common.norm(x, params["final_ln"], cfg.norm)
+    if ctx.tp_size > 1:
+        xg = boundary.coded_all_gather(h, params["sp_head"], ctx.codec,
+                                       ctx.tp, axis=1)
+        labels = lax.all_gather(batch["labels"], ctx.tp, axis=1, tiled=True)
+    else:
+        xg, labels = h, batch["labels"]
+    xg = lax.stop_gradient(xg)
+    head = lax.stop_gradient(M._head_w(params, ctx))          # [D, V_loc]
+
+    hp = params["draft_heads"]
+    H = hp["w1"].shape[0]
+    B, S, _ = xg.shape
+    pos = jnp.arange(S)[None, :]
+    loss = jnp.zeros((), F32)
+    acc = jnp.zeros((), F32)
+    for j in range(H):
+        z = head_hidden_one(hp, j, xg)
+        logits = (z @ head).astype(F32)                       # [B,S,V_loc]
+        lab_j = jnp.roll(labels, -(j + 1), axis=1)
+        mask = (pos < S - (j + 1)).astype(F32) * jnp.ones((B, 1), F32)
+        nll, hit = _dist_nll(logits, lab_j, ctx)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = loss + jnp.sum(nll * mask) / denom
+        acc = acc + jnp.sum(hit * mask) / denom
+    loss = loss / H
+    metrics = {"loss": loss, "draft_acc": acc / H}
+    return loss / ctx.dp_size, metrics

@@ -464,7 +464,8 @@ def forward_loss(params, batch, ctx: Context):
     return loss / ctx.dp_size, metrics
 
 
-def forward_prefill(params, batch, ctx: Context, last_pos=None):
+def forward_prefill(params, batch, ctx: Context, last_pos=None,
+                    return_hidden=False):
     """Prefill: fill caches, return last-token logits + caches.
 
     ``last_pos`` (optional, scalar or [B] int32): per-sequence index of
@@ -472,6 +473,9 @@ def forward_prefill(params, batch, ctx: Context, last_pos=None):
     fixed-length prefill (the serving engine's admit path).  Defaults to
     the final position.  When set, the selected hidden crosses the wire
     through the sp_head codec so its logits match the decode path.
+
+    ``return_hidden``: also return the selected last hidden [B, D]
+    (post-wire, tp-replicated) for the learned draft heads.
     """
     cfg = ctx.cfg
     ctx = ctx.with_(mode="prefill")
@@ -512,6 +516,8 @@ def forward_prefill(params, batch, ctx: Context, last_pos=None):
     logits = (xg_last @ _head_w(params, ctx)).astype(F32)
     if cfg.final_softcap:
         logits = common.softcap(logits, cfg.final_softcap)
+    if return_hidden:
+        return logits, caches, xg_last
     return logits, caches
 
 
@@ -605,7 +611,8 @@ def _unit_verify(unit_p, x, cache_u, pos, ctx: Context, aux):
     return x, new_cache
 
 
-def forward_verify(params, cache, tokens, pos, ctx: Context, aux_extra=None):
+def forward_verify(params, cache, tokens, pos, ctx: Context, aux_extra=None,
+                   return_hidden=False):
     """Batched speculative-verify step: score K1 = spec_k+1 positions of
     every slot in ONE forward (the decode-boundary traffic of K1 steps
     through one set of coded collectives — the workload the spike wire
@@ -621,6 +628,11 @@ def forward_verify(params, cache, tokens, pos, ctx: Context, aux_extra=None):
     Returns (logits_local [B, K1, V_loc], new_cache);
     logits[:, j] condition on tokens[:, :j+1] — greedy-argmax of column j
     is the verify target for draft j+1.
+
+    ``return_hidden``: also return the final hidden [B, K1, D] AFTER the
+    sp_head wire roundtrip — replicated across tp ranks, so the learned
+    draft heads (``draft_heads.head_hiddens``) can read it with no new
+    collective.
     """
     cfg = ctx.cfg
     ctx = ctx.with_(mode="decode")
@@ -661,6 +673,8 @@ def forward_verify(params, cache, tokens, pos, ctx: Context, aux_extra=None):
     logits = (h @ head).astype(F32)                          # [B,K1,V_loc]
     if cfg.final_softcap:
         logits = common.softcap(logits, cfg.final_softcap)
+    if return_hidden:
+        return logits, new_cache, h
     return logits, new_cache
 
 

@@ -16,6 +16,15 @@ examples/train_hnn_lm.py and launch/train_cli.py:
     function depends on absolute device count.
   * NaN/overflow guard — skips the update and counts the event (grad
     spike protection for bf16 training).
+  * fault injection — ``run(injector=...)`` takes anything with the
+    ``repro.serving.slo.FaultInjector.next_fault()`` contract and maps
+    its kinds onto the machinery above: ``preempt`` triggers the SIGTERM
+    checkpoint+clean-exit path, ``replica_loss`` restores from the
+    newest committed checkpoint and replays forward (the restart loop,
+    without killing the process), ``suspend`` books an injected
+    straggler tick into the EWMA watch.  One seeded ``FaultPlan`` thus
+    drives the same fault timeline into serving (engine observer) and
+    training (this loop).
 """
 from __future__ import annotations
 
@@ -50,6 +59,8 @@ class TrainLoop:
         self.preempted = False
         self.straggler_events = 0
         self.nan_skips = 0
+        #: per-kind injected-fault tally (``run(injector=...)``)
+        self.injected: dict = {}
         self._ewma: Optional[float] = None
         try:
             signal.signal(signal.SIGTERM, self._on_preempt)
@@ -62,7 +73,27 @@ class TrainLoop:
 
     # ------------------------------------------------------------------
     def run(self, params, opt_state, n_steps: int, resume: bool = True,
-            mesh=None, pspecs=None, ospecs=None):
+            mesh=None, pspecs=None, ospecs=None, injector=None):
+        """Drive ``step_fn`` for ``n_steps`` with checkpoint/restart.
+
+        ``injector`` (optional) is rolled once per step BEFORE the step
+        runs — duck-typed on ``next_fault() -> (kind, pick)`` (see
+        ``repro.serving.slo.FaultInjector``):
+
+          ``preempt``       the scheduler's preemption notice: same path
+                            as SIGTERM — checkpoint, clean exit
+          ``replica_loss``  revert to the newest committed checkpoint
+                            and replay from there (the deterministic
+                            data pipeline makes the redone steps
+                            bit-exact); with no checkpoint yet, restart
+                            from the initial state at step 0
+          ``suspend``       a stalled host: the step's recorded wall
+                            time is inflated past the straggler
+                            threshold so the EWMA watch fires
+
+        Injected events are tallied on ``self.injected`` and, when the
+        injector carries a compatible dict, on ``injector.injected``.
+        """
         start = 0
         if resume and self.ckpt.latest_step() is not None:
             (params, opt_state), start = self.ckpt.restore(
@@ -70,15 +101,49 @@ class TrainLoop:
                 mesh=mesh,
                 specs=(pspecs, ospecs) if mesh is not None else None)
             self.log(f"[ft] resumed from step {start}")
+        restore_specs = (pspecs, ospecs) if mesh is not None else None
+        if injector is not None and self.ckpt.latest_step() is None:
+            # a replica-loss-tolerant run always has a base checkpoint
+            # to fall back to (the live state can't serve as one: train
+            # steps donate their input buffers)
+            self.ckpt.save(start, (params, opt_state), blocking=True)
+
+        def _tally(kind):
+            self.injected[kind] = self.injected.get(kind, 0) + 1
+            inj = getattr(injector, "injected", None)
+            if isinstance(inj, dict):
+                inj[kind] = inj.get(kind, 0) + 1
 
         metrics_hist = []
-        for step in range(start, n_steps):
+        step = start
+        while step < n_steps:
+            fault = None
+            if injector is not None:
+                fault, _ = injector.next_fault()
+            if fault == "preempt":
+                _tally("preempt")
+                self.log(f"[ft] step {step}: injected preemption notice")
+                self.preempted = True
+            elif fault == "replica_loss":
+                _tally("replica_loss")
+                (params, opt_state), step = self.ckpt.restore(
+                    (params, opt_state), mesh=mesh, specs=restore_specs)
+                self.log(f"[ft] replica loss: replaying from step {step}")
+                del metrics_hist[max(step - start, 0):]
+                continue
             batch = self.data.batch(step)
             t0 = time.time()
             new_params, new_opt, metrics = self.step_fn(
                 params, opt_state, batch)
             loss = float(metrics["loss"])
             dt = time.time() - t0
+            if fault == "suspend":
+                _tally("suspend")
+                # a stalled host shows up as wall time, nothing else:
+                # push this tick past the straggler threshold so the
+                # watch (and its re-shard callback story) exercises
+                dt += self.cfg.straggler_factor * max(self._ewma or dt,
+                                                      dt) + 1e-3
 
             # NaN guard: skip poisoned updates
             if not np.isfinite(loss):
@@ -109,5 +174,6 @@ class TrainLoop:
                 self.ckpt.wait()
                 self.log(f"[ft] clean exit at step {step + 1}")
                 break
+            step += 1
         self.ckpt.wait()
         return params, opt_state, metrics_hist

@@ -19,6 +19,24 @@ BENCH_serve.json perf trajectory).
                  positions per slot through the same coded boundaries;
                  greedy acceptance is token-identical to ``spec_k=0``.
                  Recurrent-state families force 0 (no rollback).
+``drafter``      Who proposes those spec_k tokens.  ``"ngram"``
+                 (default): host-side prompt-lookup over each slot's
+                 committed history (``NGramDrafter``) — free, but the
+                 host must see step t's tokens before it can draft step
+                 t+1, so ``async_depth`` can only overlap admission
+                 prefill.  ``"heads"``: learned draft heads
+                 (``models.draft_heads``; train via
+                 ``examples/train_hnn_lm.py --draft-heads``) riding the
+                 verify step itself — acceptance, correction and the
+                 next step's drafts are all computed on device, the
+                 verify feed chains device-to-device, and verify
+                 dispatches pipeline under ``async_depth > 0`` with NO
+                 host join between them.  Needs a ``"draft_heads"``
+                 subtree in params (typed ``EngineConfigError``
+                 otherwise) with at least ``spec_k`` heads.  Both
+                 drafters are greedy-token-identical to ``spec_k=0``
+                 (fuzz-enforced across drafter x spec_k x async_depth x
+                 codec x disagg).
 ``num_pages``    KV page-pool size, independent of ``num_slots *
                  max_seq``.  0: dense-equivalent default (can never
                  exhaust before the slots do); smaller is the paging
@@ -94,8 +112,8 @@ SLO harness knobs (``repro.serving.workload`` / ``repro.serving.slo``):
 """
 from .draft import NGramDrafter
 from .engine import (WARMUP_RID, EngineConfig, Request, ServingEngine,
-                     make_engine_decode_step, make_engine_prefill_step,
-                     make_engine_verify_step)
+                     make_engine_decode_step, make_engine_heads_verify_step,
+                     make_engine_prefill_step, make_engine_verify_step)
 from .errors import (CacheOverflowError, EngineConfigError,
                      PagePoolExhausted, SchedulerStall, SlotsExhausted)
 from .kv_cache import PagedKVCache, SlotAllocator
@@ -115,5 +133,5 @@ __all__ = ["BENCH_SCHEMA", "CacheOverflowError", "EngineConfig",
            "WARMUP_RID", "load_bench", "make_bench_payload", "make_trace",
            "preset_trace", "replay", "sample", "sample_verify",
            "validate_bench", "write_bench", "zoo_mix",
-           "make_engine_decode_step", "make_engine_prefill_step",
-           "make_engine_verify_step"]
+           "make_engine_decode_step", "make_engine_heads_verify_step",
+           "make_engine_prefill_step", "make_engine_verify_step"]

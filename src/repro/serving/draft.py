@@ -1,20 +1,40 @@
 """Deterministic self-drafting proposers for speculative decoding.
 
-The engine's verify step makes k extra decode-boundary crossings cheap
-(the spike/int8 wire carries them as coded counts), so even a trivial
-host-side drafter buys real speedup whenever its guesses land.  The
-default here is prompt-lookup / n-gram drafting (no draft model, no
-extra device work): match the longest recent suffix of the slot's token
-history against earlier occurrences and propose the continuation that
-followed last time.  On repetitive workloads (code, structured text,
-copy-heavy prompts) acceptance is high; on incompressible streams it
-degrades gracefully to vanilla decoding (the verify step still commits
-one token per step, exactly like spec_k=0).
+The engine supports two drafters (``EngineConfig.drafter``), split by
+where the proposal is computed:
 
-Determinism matters: the drafter is pure host state derived from the
-committed token stream, so a slot proposes the same drafts whether it
-shares the batch with 0 or num_slots-1 neighbours — a prerequisite for
-the engine's greedy spec/vanilla token-identity invariant.
+* ``"ngram"`` — the host-side prompt-lookup drafter in this module.
+  No draft model, no extra device work: match the longest recent
+  suffix of the slot's committed token history against earlier
+  occurrences and propose the continuation that followed last time.
+  On repetitive workloads (code, structured text, copy-heavy prompts)
+  acceptance is high; on incompressible streams it degrades gracefully
+  to vanilla decoding (the verify step still commits one token per
+  step, exactly like spec_k=0).  The cost is structural, not
+  per-token: the host must SEE step t's committed tokens before it
+  can draft step t+1, so every verify dispatch is fenced by a device
+  sync and ``async_depth`` can only overlap admission prefill.
+
+* ``"heads"`` — learned draft heads (``models.draft_heads``, trained
+  Medusa-style against the next-k-token objective) evaluated inside
+  the verify step itself.  Acceptance, the correction token and the
+  NEXT step's drafts are all computed on device from the verify
+  logits and the trunk's final hidden, so the next verify feed chains
+  device-to-device and verify dispatches pipeline under
+  ``async_depth > 0`` with no host join between them.  The host
+  drafter below is simply not constructed in that mode.
+
+Both drafters feed the same verify/accept machinery and both are
+greedy-token-identical to vanilla decoding — the drafter only moves
+WHICH positions get scored per forward, never what gets committed.
+
+Determinism matters: the n-gram drafter is pure host state derived
+from the committed token stream, so a slot proposes the same drafts
+whether it shares the batch with 0 or num_slots-1 neighbours — a
+prerequisite for the engine's greedy spec/vanilla token-identity
+invariant.  (The heads drafter gets the same property for free: its
+drafts are a pure function of device state that the identity invariant
+already pins.)
 """
 from __future__ import annotations
 

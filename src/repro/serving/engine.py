@@ -76,9 +76,24 @@ token-identical to the sync loop — per-slot streams are batch-
 independent and the chained device tokens are the very same values the
 host would have fed back — asserted by ``tests/test_engine_fuzz.py``
 and the ``serving_parity``/``serving_spec_parity`` scenarios.  With
-``spec_k > 0`` the host must see step t's accepted tokens before it can
-draft step t+1, so a verify dispatch first joins the pipeline; what
-still overlaps is admission prefill against the in-flight verify step.
+``spec_k > 0`` and the default ``drafter="ngram"`` the host must see
+step t's accepted tokens before it can draft step t+1, so a verify
+dispatch first joins the pipeline; what still overlaps is admission
+prefill against the in-flight verify step.  ``drafter="heads"`` removes
+that join: trained draft heads (``models.draft_heads``) ride the verify
+step itself, so each step emits — on device — both its sampled tokens
+AND the next step's complete feed (accepted token + head-argmax drafts)
+plus chained positions, and the host dispatches verify t+1 against
+those device arrays without ever syncing step t.  ``spec_k > 0`` then
+composes with ``async_depth > 0`` exactly like the plain decode path
+(acceptance bookkeeping is recomputed at commit from the synced feed
+snapshot; truncation always retires the slot, so any column whose
+device-side position ran ahead of the host is a zombie discarded by
+slot identity, and page reclaim defers to the last in-flight commit of
+the chain).  Heads drafting needs a trained ``"draft_heads"`` subtree
+in the params tree (``examples/train_hnn_lm.py --draft-heads``);
+non-heads programs strip it so their compiled signatures stay
+trunk-only.
 
 Admission maps only
 ``ceil(prompt_len / page_size)`` pages; each decode/verify step first
@@ -120,6 +135,7 @@ from collections import deque
 from typing import Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -127,10 +143,13 @@ from ..configs.base import ShapeCell
 from ..launch.serve import strip_dp_specs
 from ..launch.specs import (cache_specs, default_num_pages, make_context,
                             make_plan, serve_decode_input_specs,
-                            serve_feed_specs, serve_verify_input_specs,
-                            verify_shape_cell)
+                            serve_feed_specs, serve_heads_feed_specs,
+                            serve_verify_input_specs, verify_shape_cell)
 from ..launch.train import shard_params_specs
+from ..models import common as MC
+from ..models import draft_heads as DH
 from ..models import model as M
+from ..models import params as PR
 from . import sampling
 from .draft import NGramDrafter
 from .errors import (CacheOverflowError, EngineConfigError,
@@ -141,8 +160,8 @@ from .sampling import SamplingConfig
 __all__ = ["CacheOverflowError", "EngineConfig", "EngineConfigError",
            "PagePoolExhausted", "Request", "SchedulerStall",
            "ServingEngine", "SlotsExhausted", "WARMUP_RID",
-           "make_engine_decode_step", "make_engine_prefill_step",
-           "make_engine_verify_step"]
+           "make_engine_decode_step", "make_engine_heads_verify_step",
+           "make_engine_prefill_step", "make_engine_verify_step"]
 
 
 #: Reserved request id for ``warmup``'s throwaway request.  A fresh
@@ -175,6 +194,17 @@ class EngineConfig:
     replicate_weights: bool = False
     seed: int = 0
     spec_k: int = 0                # draft tokens per verify step (0: off)
+    drafter: str = "ngram"         # speculative draft source: "ngram"
+    #                                (deterministic host-side prompt
+    #                                lookup — needs committed tokens, so
+    #                                every verify dispatch joins the
+    #                                pipeline first) or "heads" (trained
+    #                                draft heads evaluated ON DEVICE
+    #                                inside the verify step — the feed
+    #                                for step t+1 chains from step t
+    #                                without a host sync, so spec_k
+    #                                composes with async_depth; requires
+    #                                a "draft_heads" params subtree)
     async_depth: int = 0           # decode steps the host may dispatch
     #                                ahead of the oldest un-synced step
     #                                (0: classic synchronous loop)
@@ -264,14 +294,19 @@ class _Resume:
 class _InFlight:
     """One dispatched, not-yet-committed batched device step."""
 
-    kind: str                          # "decode" | "verify"
+    kind: str                          # "decode" | "verify" | "verify_heads"
     #: (slot index, _Slot) pairs live at dispatch time — the OBJECT, not
     #: the index, ties the step's outputs to requests, so a slot retired
     #: (or even re-admitted) between dispatch and commit simply drops
     #: its column instead of corrupting the new occupant
     entries: list
     out: object                        # device token future [n] or [n,K1]
-    drafts: Optional[np.ndarray] = None   # [n, spec_k] (verify only)
+    drafts: Optional[np.ndarray] = None   # [n, spec_k] (ngram verify only)
+    #: heads verify only: the DEVICE feed/pos snapshot this step scored
+    #: — synced at commit to recompute acceptance host-side (the drafts
+    #: never visit the host before the step that scores them runs)
+    feed_in: Optional[object] = None      # device [n, K1]
+    pos_in: Optional[object] = None       # device [n]
 
 
 def make_engine_prefill_step(cfg, plan, mesh, scfg: SamplingConfig,
@@ -382,6 +417,86 @@ def make_engine_verify_step(cfg, plan, mesh, scfg: SamplingConfig, spec_k,
     return jax.jit(fn, donate_argnums=(1,))
 
 
+def make_engine_heads_verify_step(cfg, plan, mesh, scfg: SamplingConfig,
+                                  spec_k, page_size, num_pages, max_seq,
+                                  replicate_weights=False,
+                                  attn_kernel="fused"):
+    """verify_heads(params, cache, tokens[B,K1], pos[B], bt, clp, clo,
+    temp[B], key) -> (tokens_out [B,K1], feed_next [B,K1],
+    pos_next [B], cache) — cache donated.
+
+    The device-drafting sibling of ``make_engine_verify_step``: the same
+    batched K1-position forward and sampler, but ``params`` carries a
+    ``"draft_heads"`` subtree (replicated — see ``models.draft_heads``)
+    and the step ALSO computes, entirely on device, everything the next
+    verify dispatch needs:
+
+      acc       longest prefix of the fed drafts ``tokens[:, 1:]``
+                matching the sampled outputs ``tok[:, :-1]`` — the exact
+                acceptance rule the host applies at commit
+      corr      the correction/bonus token ``tok[:, acc]`` (the last
+                token the commit will keep)
+      feed_next ``[corr, head-argmax drafts]``: the draft heads read the
+                post-roundtrip hidden at the accepted position (h is
+                replicated across tp ranks there, so replicated heads
+                draft identically per rank with zero new collectives),
+                project through the tp-sharded LM head, and take the
+                distributed argmax
+      pos_next  ``min(pos + acc + 1, max_seq)`` — the committed position
+                the host will reach for any slot it neither truncates
+                nor retires (truncation always retires, making the
+                slot's later in-flight columns zombies)
+
+    Chaining (feed_next, pos_next) into the next dispatch is what
+    deletes the ngram drafter's host join: greedy identity still holds
+    structurally because garbage drafts merely fail acceptance.
+    """
+    _, pspecs, _ = shard_params_specs(cfg, plan)
+    hspecs = PR.specs_tree(DH.draft_head_defs(cfg, 1), plan.dp, plan.tp)
+    ctx = make_context(plan, "decode")
+    if replicate_weights:
+        pspecs = strip_dp_specs(pspecs)
+        hspecs = strip_dp_specs(hspecs)
+        ctx = ctx.with_(dp_size=1)
+    pspecs = dict(pspecs)
+    pspecs["draft_heads"] = hspecs
+    _, ispecs = serve_verify_input_specs(plan, spec_k, page_size, num_pages)
+    fused = attn_kernel == "fused"
+    k = spec_k
+
+    def step(params, cache, tokens, pos, bt, clp, clo, temp, key):
+        aux = {"block_table": bt}
+        if fused:
+            aux["page_list"] = (clp, clo)
+        logits, cache, h = M.forward_verify(params, cache, tokens, pos,
+                                            ctx, aux_extra=aux,
+                                            return_hidden=True)
+        tok = sampling.sample_verify(logits, key, temp, tp=ctx.tp,
+                                     tp_size=ctx.tp_size, cfg=scfg)
+        match = (tokens[:, 1:] == tok[:, :-1]).astype(jnp.int32)
+        acc = jnp.cumprod(match, axis=1).sum(axis=1)           # [B] 0..k
+        corr = jnp.take_along_axis(tok, acc[:, None], axis=1)[:, 0]
+        h_acc = jnp.take_along_axis(h, acc[:, None, None], axis=1)[:, 0]
+        z = DH.head_hiddens(params["draft_heads"], h_acc)      # [B,H,D]
+        head = M._head_w(params, ctx)                          # [D,V_loc]
+        dlog = (z @ head.astype(z.dtype)).astype(jnp.float32)
+        if cfg.final_softcap:
+            dlog = MC.softcap(dlog, cfg.final_softcap)
+        drafts = sampling.dist_argmax(dlog, ctx.tp, ctx.tp_size)  # [B,H]
+        feed = jnp.concatenate([corr[:, None], drafts[:, :k]], axis=1)
+        pos_next = jnp.minimum(pos + acc + 1, max_seq)
+        return tok, feed, pos_next, cache
+
+    fn = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(pspecs, ispecs["cache"], ispecs["token"], ispecs["pos"],
+                  ispecs["bt"], ispecs["clp"], ispecs["clo"],
+                  ispecs["temp"], ispecs["key"]),
+        out_specs=(ispecs["token"], ispecs["token"], ispecs["pos"],
+                   ispecs["cache"]), check_vma=False)
+    return jax.jit(fn, donate_argnums=(1,))
+
+
 _RECURRENT_CACHE_KEYS = ("ssm_state", "rnn_state", "rwkv_state")
 
 
@@ -428,6 +543,9 @@ class ServingEngine:
             raise EngineConfigError(
                 f"attn_kernel={ecfg.attn_kernel!r}: expected 'fused' or "
                 "'reference'")
+        if ecfg.drafter not in ("ngram", "heads"):
+            raise EngineConfigError(
+                f"drafter={ecfg.drafter!r}: expected 'ngram' or 'heads'")
         if ecfg.kv_wire not in ("fp", "coded"):
             raise EngineConfigError(
                 f"kv_wire={ecfg.kv_wire!r}: expected 'fp' or 'coded'")
@@ -458,6 +576,34 @@ class ServingEngine:
         # recurrent state folds every token in and cannot roll back a
         # rejected draft: those families serve vanilla (spec_k=0)
         self.spec_k = 0 if self._has_state else ecfg.spec_k
+        self.drafter_kind = ecfg.drafter
+        if ecfg.drafter == "heads":
+            if ecfg.spec_k <= 0:
+                raise EngineConfigError(
+                    "drafter='heads' requires spec_k > 0 (the heads only "
+                    "ever draft inside speculative verify steps)")
+            if self.spec_k > 0:
+                if not (isinstance(params, dict)
+                        and "draft_heads" in params):
+                    raise EngineConfigError(
+                        "drafter='heads' needs trained draft-head params: "
+                        "the params tree has no 'draft_heads' subtree — "
+                        "train one (examples/train_hnn_lm.py "
+                        "--draft-heads K) and restore its checkpoint")
+                n_heads = int(params["draft_heads"]["w1"].shape[0])
+                if n_heads < self.spec_k:
+                    raise EngineConfigError(
+                        f"drafter='heads': {n_heads} draft heads < "
+                        f"spec_k={self.spec_k} (one head per draft "
+                        "position)")
+        #: the params tree WITHOUT the draft-heads subtree: every program
+        #: except the heads verify step compiles against trunk-only
+        #: shard_map in_specs, so an extra params key would be a pytree
+        #: mismatch — strip it once here
+        self._trunk = params
+        if isinstance(params, dict) and "draft_heads" in params:
+            self._trunk = {kk: v for kk, v in params.items()
+                           if kk != "draft_heads"}
 
         scfg = SamplingConfig(top_k=ecfg.top_k, top_p=ecfg.top_p)
         self._scfg = scfg
@@ -476,10 +622,16 @@ class ServingEngine:
             self.plan_ver = make_plan(
                 cfg, verify_shape_cell(ecfg.max_seq, ecfg.num_slots,
                                        self.spec_k), mesh)
-            self._verify = make_engine_verify_step(
-                cfg, self.plan_ver, mesh, scfg, self.spec_k,
-                ecfg.page_size, self.num_pages, ecfg.replicate_weights,
-                ecfg.attn_kernel)
+            if self.drafter_kind == "heads":
+                self._verify = make_engine_heads_verify_step(
+                    cfg, self.plan_ver, mesh, scfg, self.spec_k,
+                    ecfg.page_size, self.num_pages, ecfg.max_seq,
+                    ecfg.replicate_weights, ecfg.attn_kernel)
+            else:
+                self._verify = make_engine_verify_step(
+                    cfg, self.plan_ver, mesh, scfg, self.spec_k,
+                    ecfg.page_size, self.num_pages,
+                    ecfg.replicate_weights, ecfg.attn_kernel)
         self.cache = PagedKVCache(self.plan, self.plan_pre, mesh,
                                   ecfg.page_size, self.num_pages,
                                   kv_wire=ecfg.kv_wire)
@@ -505,8 +657,12 @@ class ServingEngine:
         # -- dispatch/commit pipeline state --
         self.async_depth = ecfg.async_depth
         self._inflight: deque[_InFlight] = deque()
-        self._feed_specs = serve_feed_specs(self.plan, ecfg.page_size,
-                                            self.spec_k)
+        if self.spec_k > 0 and self.drafter_kind == "heads":
+            self._feed_specs = serve_heads_feed_specs(
+                self.plan, ecfg.page_size, self.spec_k)
+        else:
+            self._feed_specs = serve_feed_specs(self.plan, ecfg.page_size,
+                                                self.spec_k)
         #: last decode dispatch's sampled-token DEVICE array: the token
         #: feed of the next dispatch chains it back in without a host
         #: round-trip (None until the first decode dispatch)
@@ -519,6 +675,12 @@ class ServingEngine:
         #: the next decode feed patches these straight from the device
         #: (the value never visits the host on the admission path)
         self._tok_pending: dict[int, object] = {}
+        #: heads drafter: the last verify dispatch's chained
+        #: (feed [B,K1], pos [B]) DEVICE arrays — the next dispatch's
+        #: inputs, with dirty/pending slots patched in (None until the
+        #: first heads verify dispatch)
+        self._vfeed_dev = None
+        self._vpos_dev = None
         self._admit_seq = 0
         self._key = jax.random.PRNGKey(ecfg.seed)
         self._tick = 0
@@ -526,6 +688,12 @@ class ServingEngine:
         self.decode_steps = 0
         self.spec_commits = 0      # tokens committed by verify steps
         self.spec_verifies = 0     # (slot, verify-step) participations
+        self.pipelined_dispatches = 0  # verify dispatches launched while
+        #                                another step was still un-synced
+        #                                — the host join the heads drafter
+        #                                deletes; structurally 0 for
+        #                                drafter="ngram" (tests assert
+        #                                both directions)
         self.preemptions = 0       # evict + re-queue events (pool
         #                            pressure or injected faults)
         self.suspends = 0          # drain + snapshot + resume events
@@ -634,7 +802,7 @@ class ServingEngine:
         toks = np.zeros((1, S_pre), np.int32)
         toks[0, :P_len] = np.asarray(prompt, np.int32)
         first, pre_cache = prefill_fn(
-            self.params, toks, np.array([P_len - 1], np.int32),
+            self._trunk, toks, np.array([P_len - 1], np.int32),
             np.array([req.temperature], np.float32), self._next_key())
         # admit maps ceil(P_len/page_size) pages — O(prompt), not
         # O(max_seq); each decode step maps the next page on demand
@@ -707,11 +875,13 @@ class ServingEngine:
             # the device-side feed patch never consumed this value; the
             # next feed takes it from the (now correct) host shadow
             self._tok_dirty.add(slot)
-        if self.spec_k > 0 and st.drafter is None:
+        if (self.spec_k > 0 and self.drafter_kind == "ngram"
+                and st.drafter is None):
             # st.out holds the committed stream so far — prior tokens
             # carried across a work-preserving suspend plus this first
             # token — so the drafter sees the same history an
-            # uninterrupted run would have fed it incrementally
+            # uninterrupted run would have fed it incrementally (the
+            # heads drafter keeps no host state: drafts live on device)
             st.drafter = NGramDrafter(list(st.req.prompt) + st.out)
         self._emit("on_first_token", st.req.rid)
         self._maybe_retire(slot, first)
@@ -934,6 +1104,8 @@ class ServingEngine:
         self._tok_pending.clear()
         self._tok_dirty.clear()
         self._tok_dev = None
+        self._vfeed_dev = None
+        self._vpos_dev = None
         reqs.extend(self._queue)
         self._queue.clear()
         self.suspends += 1
@@ -986,6 +1158,22 @@ class ServingEngine:
         ``commit()``)."""
         while self._queue and self._can_admit_next():
             self._admit(self._queue.popleft())
+        if self.spec_k > 0 and self.drafter_kind == "heads":
+            # device-side drafting: the previous verify step already
+            # emitted the next feed (accepted token + head drafts) and
+            # chained positions — NO pipeline join.  Only slots retired
+            # by prediction at admit (never scheduled, so no commit will
+            # ever fold them) need their deferred token folded here,
+            # exactly like the plain decode path below.
+            for i, st in enumerate(self._slots):
+                if (st is not None and not st.live
+                        and st.pending_first is not None):
+                    self._fold_first(i, st)
+            live = self._live_slots()
+            if not live:
+                return False
+            self._dispatch_verify_heads(live)
+            return True
         if self.spec_k > 0:
             # drafting reads committed tokens: join the pipeline first
             # (the admissions above already overlapped the in-flight
@@ -1023,7 +1211,9 @@ class ServingEngine:
         #                                  executed once this returns
         self.cache.note_commit()
         self.decode_steps += 1
-        if rec.kind == "verify":
+        if rec.kind == "verify_heads":
+            self._commit_verify_heads(rec, out)
+        elif rec.kind == "verify":
             self._commit_verify(rec, out)
         else:
             self._commit_decode(rec, out)
@@ -1150,7 +1340,7 @@ class ServingEngine:
         clo = self._stage(self.cache.page_list_pos, self._feed_specs["clo"])
         temp = self._stage(self._temp, self._feed_specs["temp"])
         out, self.cache.buffers = self._decode(
-            self.params, self.cache.buffers, tok, pos, bt, clp, clo, temp,
+            self._trunk, self.cache.buffers, tok, pos, bt, clp, clo, temp,
             self._next_key())
         self.cache.note_dispatch()
         self._tok_dev = out
@@ -1203,12 +1393,89 @@ class ServingEngine:
         clo = self._stage(self.cache.page_list_pos, self._feed_specs["clo"])
         temp = self._stage(self._temp, self._feed_specs["temp"])
         out, self.cache.buffers = self._verify(
-            self.params, self.cache.buffers, tok_in, pos, bt, clp, clo,
+            self._trunk, self.cache.buffers, tok_in, pos, bt, clp, clo,
             temp, self._next_key())
         self.cache.note_dispatch()
         self._inflight.append(
             _InFlight("verify", [(i, self._slots[i]) for i in live], out,
                       drafts=drafts))
+        for i in live:
+            self._slots[i].inflight += 1
+
+    def _verify_feed(self):
+        """Device (feed [B,K1], pos [B]) for the next heads-drafter
+        verify dispatch.
+
+        Chains the previous verify step's device-emitted feed/positions
+        straight back in — drafts and acceptance never visit the host
+        between dispatches.  Slots that need re-seeding patch in exactly
+        like ``_token_feed``: host-folded slots (``_tok_dirty``) from
+        the host shadow at their committed position, freshly admitted
+        slots (``_tok_pending``) from their prefill's DEVICE first-token
+        array.  A re-seeded row is ``[tok]*K1`` — repeat-token drafts,
+        garbage-safe under longest-prefix acceptance (worst case the
+        step degrades to vanilla decode for that slot for one step).
+        """
+        K1 = self.spec_k + 1
+        if self._vfeed_dev is None:
+            self._tok_dirty.clear()
+            feed = self._stage(np.repeat(self._tokens[:, None], K1, axis=1),
+                               self._feed_specs["vtoken"])
+            pos = self._stage(self._pos, self._feed_specs["vpos"])
+        else:
+            feed, pos = self._vfeed_dev, self._vpos_dev
+            if self._tok_dirty:
+                idx = np.asarray(sorted(self._tok_dirty), np.int32)
+                feed = feed.at[idx].set(self._tokens[idx, None])
+                pos = pos.at[idx].set(self._pos[idx])
+                self._tok_dirty.clear()
+        if self._tok_pending:
+            for s in sorted(self._tok_pending):
+                feed = feed.at[s].set(self._tok_pending[s][0])
+                pos = pos.at[s].set(int(self._pos[s]))
+            self._tok_pending.clear()
+        return feed, pos
+
+    def _dispatch_verify_heads(self, live):
+        """Launch one speculative step with DEVICE-side drafting — no
+        pipeline join, so under ``async_depth > 0`` verify t+1 overlaps
+        verify t exactly like plain decode steps do.
+
+        Page mapping covers the worst case of every un-synced chain
+        link: each in-flight step (plus this one) can advance a slot by
+        at most spec_k+1 positions past the last COMMITTED position, so
+        ``ensure`` maps up to ``pos + (k+1) * (inflight+1)``.  The
+        unreclaimed tail this over-mapping leaves is bounded by
+        ``(k+1) * (async_depth+1)`` positions per slot and is trimmed
+        page-exactly by the chain's last commit (``st.inflight == 0``).
+        """
+        k = self.spec_k
+        live = self._ensure_for_step(
+            live, lambda i: min(
+                int(self._pos[i])
+                + (k + 1) * (self._slots[i].inflight + 1),
+                self.ecfg.max_seq))
+        if not live:
+            return
+        if self._inflight:
+            # a verify launched over a still-un-synced step: the host
+            # join the ngram drafter forces is provably gone (tests
+            # assert this counter stays 0 for drafter="ngram")
+            self.pipelined_dispatches += 1
+        feed, pos = self._verify_feed()
+        bt = self._stage(self.cache.block_table, self._feed_specs["bt"])
+        clp = self._stage(self.cache.page_list_loc, self._feed_specs["clp"])
+        clo = self._stage(self.cache.page_list_pos, self._feed_specs["clo"])
+        temp = self._stage(self._temp, self._feed_specs["temp"])
+        out, feed_next, pos_next, self.cache.buffers = self._verify(
+            self.params, self.cache.buffers, feed, pos, bt, clp, clo,
+            temp, self._next_key())
+        self.cache.note_dispatch()
+        self._vfeed_dev, self._vpos_dev = feed_next, pos_next
+        self._inflight.append(
+            _InFlight("verify_heads",
+                      [(i, self._slots[i]) for i in live], out,
+                      feed_in=feed, pos_in=pos))
         for i in live:
             self._slots[i].inflight += 1
 
@@ -1264,6 +1531,58 @@ class ServingEngine:
             self.spec_verifies += 1
             self._maybe_retire(i, int(self._tokens[i]))
 
+    def _commit_verify_heads(self, rec: _InFlight, out: np.ndarray):
+        """Commit one heads-drafter verify step.
+
+        The drafts this step scored lived only on device (the previous
+        step's chained feed), so acceptance is recomputed here from the
+        synced feed snapshot (``rec.feed_in``) against the sampled
+        outputs — the same longest-prefix rule the device applied when
+        it chained the NEXT step's feed and positions.  For a slot the
+        host neither truncates nor retires, the committed position lands
+        exactly on the chained device position, keeping every later
+        in-flight step of the chain valid; truncation (max_new_tokens,
+        EOS, context end) always retires the slot, so its later columns
+        are zombies discarded by slot-object identity — the same
+        structural safety valve the ngram path leans on.
+
+        Page reclaim is deferred while the slot still has in-flight
+        steps (they may legitimately write past this step's occupancy);
+        the chain's LAST commit trims page-exactly, and eviction frees
+        everything regardless.
+        """
+        k = self.spec_k
+        feed = np.asarray(rec.feed_in)
+        base = np.asarray(rec.pos_in)
+        for i, st in rec.entries:
+            if self._slots[i] is not st:
+                continue
+            st.inflight -= 1
+            if not self._fold_first(i, st):
+                continue
+            a = 0
+            while a < k and feed[i, a + 1] == out[i, a]:
+                a += 1
+            committed = 0
+            pos = int(base[i])
+            for j in range(a + 1):             # accepted drafts + fixup
+                tok = int(out[i, j])
+                st.out.append(tok)
+                self._tokens[i] = tok
+                pos += 1
+                committed += 1
+                self.tokens_generated += 1
+                if (len(st.out) >= st.req.max_new_tokens
+                        or (self.ecfg.eos_id is not None
+                            and tok == self.ecfg.eos_id)
+                        or pos >= self.ecfg.max_seq):
+                    break
+            self._pos[i] = pos
+            self.spec_commits += committed
+            self.spec_verifies += 1
+            if st.inflight == 0:
+                self.cache.rollback(i, pos)
+            self._maybe_retire(i, int(self._tokens[i]))
 
     @property
     def mean_accepted_len(self) -> float:
@@ -1320,6 +1639,7 @@ class ServingEngine:
         self.decode_steps = 0
         self.spec_commits = 0
         self.spec_verifies = 0
+        self.pipelined_dispatches = 0
         self.preemptions = 0
         self.suspends = 0
         self.migrations = 0
@@ -1330,13 +1650,17 @@ class ServingEngine:
 
     # -- introspection -----------------------------------------------------
 
-    def _wire_stats(self, program, ins, tokens_per_step: float):
+    def _wire_stats(self, program, ins, tokens_per_step: float,
+                    params=None):
         """lower+compile ``program`` on its input specs and parse the ICI
         collectives; (CollectiveStats, total wire bytes per token across
-        the mesh at ``tokens_per_step`` tokens committed per step)."""
+        the mesh at ``tokens_per_step`` tokens committed per step).
+        ``params`` defaults to the trunk-only tree (what every program
+        except the heads verify step compiles against)."""
         from ..launch import roofline as RL
         lowered = program.lower(
-            self.params, self.cache.buffers, ins["token"], ins["pos"],
+            self._trunk if params is None else params,
+            self.cache.buffers, ins["token"], ins["pos"],
             ins["bt"], ins["clp"], ins["clo"], ins["temp"], ins["key"])
         stats = RL.parse_collectives(lowered.compile().as_text())
         ndev = self.plan.dp_size * self.plan.tp_size
@@ -1370,8 +1694,10 @@ class ServingEngine:
         ins, _ = serve_verify_input_specs(self.plan_ver, self.spec_k,
                                           self.ecfg.page_size,
                                           self.num_pages)
-        return self._wire_stats(self._verify, ins,
-                                self.ecfg.num_slots * accepted_len)
+        return self._wire_stats(
+            self._verify, ins, self.ecfg.num_slots * accepted_len,
+            params=(self.params if self.drafter_kind == "heads"
+                    else None))
 
     def pool_stats(self) -> dict:
         """KV pool occupancy + bytes, next to the dense baseline.

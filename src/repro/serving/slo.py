@@ -97,6 +97,9 @@ class StepEvent:
     #                                  INCLUDING any KV migration below
     mig_bytes: float = 0.0           # disagg KV-migration bytes folded
     #                                  into this tick's wire_bytes
+    accepted_len: float = 0.0        # mean tokens committed per (slot,
+    #                                  verify-step) this tick — 0.0 on
+    #                                  non-speculative ticks
 
 
 @dataclasses.dataclass
@@ -138,6 +141,11 @@ class SLOMonitor:
         self._tokens_last = 0
         self._steps_last = 0
         self._pending_mig_bytes = 0.0
+        self._spec_commits_last = 0
+        self._spec_verifies_last = 0
+        self._spec_k = 0
+        #: per-tick mean accepted-draft lengths (speculative ticks only)
+        self.accepted_lens: List[float] = []
 
     # -- engine observer hooks (duck-typed; all optional) ------------------
 
@@ -214,6 +222,21 @@ class SLOMonitor:
         self._steps_last = engine.decode_steps
         alloc = engine.cache.allocator
         mig, self._pending_mig_bytes = self._pending_mig_bytes, 0.0
+        # per-step accepted-draft length: how many of this tick's verify
+        # participations' tokens the drafter paid for (the acceptance
+        # signal the drafter benches compare ngram vs heads on).
+        # getattr: observers are duck-typed and host-side stub engines
+        # (tests, external drivers) may not carry the spec counters
+        self._spec_k = max(self._spec_k, int(engine.spec_k))
+        commits = getattr(engine, "spec_commits", 0)
+        verifies = getattr(engine, "spec_verifies", 0)
+        d_acc = commits - self._spec_commits_last
+        d_ver = verifies - self._spec_verifies_last
+        self._spec_commits_last = commits
+        self._spec_verifies_last = verifies
+        acc_len = d_acc / d_ver if d_ver > 0 else 0.0
+        if d_ver > 0:
+            self.accepted_lens.append(acc_len)
         self.steps.append(StepEvent(
             t=now, dt=dt, kind=kind, tokens=max(d_tokens, 0),
             queue_depth=engine.queue_depth, active=engine.num_active,
@@ -221,7 +244,7 @@ class SLOMonitor:
             pages_in_limbo=alloc.pages_in_limbo,
             wire_bytes=self.wire_bytes_per_step.get(kind, 0.0) * d_steps
             + mig,
-            mig_bytes=mig))
+            mig_bytes=mig, accepted_len=acc_len))
 
     # -- reductions --------------------------------------------------------
 
@@ -280,6 +303,15 @@ class SLOMonitor:
                 "preemptions": self.preemptions,
                 "suspends": self.suspends,
             },
+            # accepted-draft stats (all-zero on non-speculative runs):
+            # accepted_len counts the correction token too, so rate =
+            # (accepted_len - 1) / spec_k is the fraction of DRAFTS kept
+            "acceptance": {
+                "accepted_len": percentiles(self.accepted_lens),
+                "rate": (max(float(np.mean(self.accepted_lens)) - 1.0, 0.0)
+                         / self._spec_k
+                         if self.accepted_lens and self._spec_k else 0.0),
+            },
             "migration": {
                 "count": self.migrations,
                 "kb_total": self.migrated_bytes / 1e3,
@@ -314,7 +346,8 @@ class SLOMonitor:
                  "tokens": s.tokens, "queue_depth": s.queue_depth,
                  "active": s.active, "pages_in_use": s.pages_in_use,
                  "pages_in_limbo": s.pages_in_limbo,
-                 "wire_bytes": s.wire_bytes, "mig_bytes": s.mig_bytes}
+                 "wire_bytes": s.wire_bytes, "mig_bytes": s.mig_bytes,
+                 "accepted_len": s.accepted_len}
                 for s in self.steps]
 
     def write_trace(self, path: str):
@@ -357,7 +390,16 @@ class FaultPlan:
 
 
 class FaultInjector:
-    """Drives a ``FaultPlan`` against an engine, one roll per tick."""
+    """Drives a ``FaultPlan``, one roll per tick.
+
+    Two consumers share the same seeded fault timeline: attach as a
+    serving-engine observer (``on_step`` preempts/suspends slots) or
+    pass to ``runtime.ft.TrainLoop.run(injector=...)``, which maps the
+    same kinds onto the training runtime — ``preempt`` -> the SIGTERM
+    checkpoint+clean-exit path, ``replica_loss`` -> restore from the
+    newest committed checkpoint and replay, ``suspend`` -> an injected
+    straggler tick for the EWMA watch.
+    """
 
     def __init__(self, plan: FaultPlan):
         self.plan = plan
@@ -368,22 +410,41 @@ class FaultInjector:
     def total_injected(self) -> int:
         return sum(self.injected.values())
 
-    def on_step(self, engine):
+    def next_fault(self):
+        """Roll this tick's fault dice WITHOUT touching an engine.
+
+        Returns ``(kind, pick)`` where ``kind`` is ``"preempt"`` /
+        ``"replica_loss"`` / ``"suspend"`` / ``None`` and ``pick`` a
+        second uniform draw for victim selection.  ALWAYS consumes
+        exactly two draws, whether or not a fault lands — the fault
+        schedule stays a pure function of the tick index, independent
+        of consumer state.  ``on_step`` (serving) and
+        ``runtime.ft.TrainLoop`` (training) both drive their fault
+        machinery off this one roll, so a seeded plan replays the same
+        fault timeline into either runtime.
+        """
         p = self.plan
-        # ALWAYS consume the same number of draws per tick, whether or
-        # not a fault lands — keeps the fault schedule a pure function
-        # of the tick index, independent of engine state
         u, pick = self.rng.rand(), self.rng.rand()
         if self.total_injected >= p.max_faults:
-            return
+            return None, pick
         if u >= p.p_preempt + p.p_replica_loss + p.p_suspend:
+            return None, pick
+        if u < p.p_preempt:
+            return "preempt", pick
+        if u < p.p_preempt + p.p_replica_loss:
+            return "replica_loss", pick
+        return "suspend", pick
+
+    def on_step(self, engine):
+        kind, pick = self.next_fault()
+        if kind is None:
             return
         active = engine.active_slots()
-        if u < p.p_preempt:
+        if kind == "preempt":
             if len(active) >= 1:
                 engine.preempt_slot(active[-1], kind="injected_preempt")
                 self.injected["preempt"] += 1
-        elif u < p.p_preempt + p.p_replica_loss:
+        elif kind == "replica_loss":
             if len(active) >= 1:
                 slot = active[int(pick * len(active)) % len(active)]
                 engine.preempt_slot(slot, kind="replica_loss")

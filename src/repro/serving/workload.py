@@ -67,6 +67,13 @@ class RequestClass:
     tail_len: Tuple[int, int] = (16, 16)      # tail prompt range
     gen_len: Tuple[int, int] = (4, 16)        # uniform [lo, hi]
     temperature: float = 0.0
+    distinct_tokens: bool = False    # draw each prompt WITHOUT
+    #                                  replacement: no token (hence no
+    #                                  n-gram) ever repeats inside a
+    #                                  prompt, so prompt-lookup drafting
+    #                                  has nothing to match — the
+    #                                  workload where a learned drafter
+    #                                  must carry speculation alone
 
     def __post_init__(self):
         if self.rate <= 0:
@@ -167,7 +174,12 @@ def make_trace(classes: Sequence[RequestClass], horizon_s: float,
             gen = int(rng.randint(glo, ghi + 1))
             if max_gen is not None:
                 gen = max(1, min(gen, max_gen))
-            prompt = [int(x) for x in rng.randint(0, vocab, plen)]
+            if cls.distinct_tokens:
+                plen = min(plen, vocab)
+                prompt = [int(x) for x in rng.choice(vocab, plen,
+                                                     replace=False)]
+            else:
+                prompt = [int(x) for x in rng.randint(0, vocab, plen)]
             out.append(TracedRequest(
                 t=float(t), cls=cls.name,
                 req=Request(rid=f"t{seed}/{cls.name}/{j}", prompt=prompt,
@@ -230,6 +242,13 @@ PRESETS = {
                      gen_len=(max(1, g // 4), max(2, g // 2)))],
         "short-prompt body plus a long-context tail minority"),
     "multitenant": (zoo_mix, "chat/completion/retrieval/batch zoo mix"),
+    "lowmatch": (lambda p, g, load: [
+        RequestClass("lowmatch", rate=load,
+                     prompt_len=(max(1, p // 2), p),
+                     gen_len=(max(1, g // 2), g),
+                     distinct_tokens=True)],
+        "non-repetitive prompts (distinct tokens): n-gram prompt-lookup "
+        "drafting degrades to repeat-last, learned draft heads do not"),
 }
 
 

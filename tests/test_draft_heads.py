@@ -1,0 +1,184 @@
+"""Learned draft heads: defs/forward identity, frozen-trunk training,
+checkpoint round-trip, and the typed engine-config surface.
+
+The engine-in-the-loop drafter properties (greedy token identity across
+drafter x spec_k x async_depth, the no-host-join pipelining assertion)
+live in tests/test_engine_fuzz.py next to the other identity fuzz.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.configs.reduced import reduced
+from repro.models import draft_heads as DH
+from repro.models import params as PR
+
+
+def _cfg():
+    return reduced(get_config("qwen1.5-0.5b", hnn_mode="ann")).replace(
+        dtype=jnp.float32, codec="none")
+
+
+# ---------------------------------------------------------------------------
+# defs + forward
+# ---------------------------------------------------------------------------
+
+
+def test_defs_shapes_and_identity_init():
+    """w2 = 0 at init makes every head exactly the identity — the
+    garbage-tolerant untrained draft (argmax repeats the trunk's)."""
+    cfg = _cfg()
+    D = cfg.d_model
+    hp = PR.init_params(DH.draft_head_defs(cfg, 3), jax.random.PRNGKey(0),
+                        jnp.float32)
+    assert hp["w1"].shape == (3, D, max(D // 2, 8))
+    assert hp["w2"].shape == (3, max(D // 2, 8), D)
+    assert np.asarray(hp["w1"]).any()       # w1 random, nonzero
+    assert not np.asarray(hp["w2"]).any()   # w2 zeros: identity
+    assert not np.asarray(hp["b1"]).any()
+    assert DH.num_draft_heads({"draft_heads": hp}) == 3
+
+    h = jax.random.normal(jax.random.PRNGKey(1), (2, 5, D), jnp.float32)
+    z = DH.head_hiddens(hp, h)
+    assert z.shape == (2, 5, 3, D)
+    np.testing.assert_array_equal(
+        np.asarray(z), np.broadcast_to(np.asarray(h)[:, :, None, :],
+                                       z.shape))
+
+
+def test_head_hidden_one_matches_all_heads():
+    """The loss's per-head loop and the engine's all-heads einsum are the
+    same function."""
+    cfg = _cfg()
+    D = cfg.d_model
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(2), 3)
+    hp = PR.init_params(DH.draft_head_defs(cfg, 2, d_hidden=12), k0,
+                        jnp.float32)
+    hp["w2"] = 0.5 * jax.random.normal(k1, hp["w2"].shape, jnp.float32)
+    h = jax.random.normal(k2, (4, D), jnp.float32)
+    z_all = np.asarray(DH.head_hiddens(hp, h))
+    for j in range(2):
+        np.testing.assert_allclose(z_all[:, j],
+                                   np.asarray(DH.head_hidden_one(hp, j, h)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_custom_hidden_width():
+    cfg = _cfg()
+    hp = PR.init_params(DH.draft_head_defs(cfg, 1, d_hidden=4),
+                        jax.random.PRNGKey(0), jnp.float32)
+    assert hp["w1"].shape[-1] == 4 and hp["w2"].shape[1] == 4
+
+
+# ---------------------------------------------------------------------------
+# frozen-trunk training
+# ---------------------------------------------------------------------------
+
+
+def test_draft_head_train_step_learns_and_freezes_trunk():
+    """A few heads-only steps on a fixed batch: loss drops, draft_acc
+    rises, and every trunk leaf is bit-identical before/after (the
+    'frozen' in frozen-trunk)."""
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.launch import specs as SP, train as TR
+    from repro.launch.mesh import make_mesh
+    from repro.optim import adamw
+
+    cfg = _cfg()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    plan = SP.make_plan(cfg, ShapeCell("dh_train", 32, 2, "train"), mesh)
+    n = 25
+    step, pspecs, ospecs, _ = TR.make_draft_head_train_step(
+        cfg, plan, mesh, 2, opt_cfg=adamw.AdamWConfig(
+            lr=1e-2, warmup_steps=3, total_steps=n))
+    assert "draft_heads" in pspecs
+    params = TR.init_sharded_params(cfg, plan, mesh, jax.random.PRNGKey(0))
+    trunk_before = {k: np.asarray(v) for k, v in params.items()
+                    if not isinstance(v, dict)}
+    params["draft_heads"] = TR.init_draft_head_params(
+        cfg, plan, mesh, jax.random.PRNGKey(1), 2)
+    opt = adamw.init_opt_state(params["draft_heads"])
+    batch = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                   global_batch=2)).batch(0)
+    hist = []
+    for _ in range(n):
+        params, opt, m = step(params, opt, batch)
+        hist.append({k: float(v) for k, v in m.items()})
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert hist[-1]["draft_acc"] >= hist[0]["draft_acc"]
+    for k, v in trunk_before.items():
+        np.testing.assert_array_equal(v, np.asarray(params[k]), err_msg=k)
+    # the heads DID move
+    assert np.asarray(params["draft_heads"]["w2"]).any()
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_with_heads_subtree(tmp_path):
+    """Trunk + heads checkpoint as ONE path-keyed manifest and restore
+    bit-exactly; a trunk-only template still restores from a trunk-only
+    checkpoint in the same format (path-keyed coexistence)."""
+    from repro.checkpoint.manager import CheckpointManager
+
+    cfg = _cfg()
+    hp = PR.init_params(DH.draft_head_defs(cfg, 2), jax.random.PRNGKey(3),
+                        jnp.float32)
+    trunk = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)}
+    full = dict(trunk)
+    full["draft_heads"] = hp
+    opt = {"m": jnp.zeros((2, 3), jnp.float32)}
+
+    mgr = CheckpointManager(str(tmp_path / "full"))
+    mgr.save(7, (full, opt), blocking=True)
+    tmpl = (jax.tree.map(jnp.zeros_like, full),
+            jax.tree.map(jnp.zeros_like, opt))
+    (back, opt_back), step = CheckpointManager(
+        str(tmp_path / "full")).restore(tmpl)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    mgr2 = CheckpointManager(str(tmp_path / "trunk_only"))
+    mgr2.save(3, (trunk, opt), blocking=True)
+    (trunk_back, _), step2 = mgr2.restore(
+        (jax.tree.map(jnp.zeros_like, trunk),
+         jax.tree.map(jnp.zeros_like, opt)))
+    assert step2 == 3
+    np.testing.assert_array_equal(np.asarray(trunk["w"]),
+                                  np.asarray(trunk_back["w"]))
+
+
+# ---------------------------------------------------------------------------
+# typed engine-config surface
+# ---------------------------------------------------------------------------
+
+
+def test_heads_drafter_config_errors_are_typed():
+    """Bad drafter name, heads without spec_k, heads without a trained
+    subtree, too few heads — all EngineConfigError, all raised BEFORE
+    the params tree is compiled against (params={} / minimal stubs)."""
+    from repro.launch.mesh import make_mesh
+    from repro.serving import EngineConfig, EngineConfigError, ServingEngine
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = _cfg()
+    with pytest.raises(EngineConfigError):
+        ServingEngine(cfg, mesh, {}, EngineConfig(
+            num_slots=2, max_seq=32, drafter="medusa"))
+    with pytest.raises(EngineConfigError):
+        ServingEngine(cfg, mesh, {}, EngineConfig(
+            num_slots=2, max_seq=32, spec_k=0, drafter="heads"))
+    with pytest.raises(EngineConfigError):
+        ServingEngine(cfg, mesh, {}, EngineConfig(
+            num_slots=2, max_seq=32, spec_k=2, drafter="heads"))
+    too_few = {"draft_heads": {"w1": np.zeros((1, 8, 4), np.float32)}}
+    with pytest.raises(EngineConfigError):
+        ServingEngine(cfg, mesh, too_few, EngineConfig(
+            num_slots=2, max_seq=32, spec_k=2, drafter="heads"))

@@ -36,6 +36,7 @@ EOS = 7
 
 _ENGINES = None
 _ASYNC_ENGINES = {}
+_HEADS_ENGINES = {}
 _MODELS = {}
 
 
@@ -97,6 +98,76 @@ def _async_engines(codec):
             _build_engine(codec, async_depth=1),
             _build_engine(codec, async_depth=1, spec_k=2))
     return _ASYNC_ENGINES[codec]
+
+
+def _heads_engines(codec):
+    """(sync ref, heads spec_k=2 sync, heads spec_k=2 async_depth=1) —
+    lazily built once per codec.  The heads are RANDOM (w2 perturbed
+    away from the identity init): their drafts are deliberately
+    arbitrary, because greedy token identity must hold for ANY draft
+    content — random heads stress the reject/rollback path the way
+    trained heads never would."""
+    if codec not in _HEADS_ENGINES:
+        import jax
+        from repro.launch import train as TR
+        from repro.launch.mesh import make_mesh  # noqa: F401 (same jax)
+        from repro.launch.specs import make_plan
+        from repro.configs.base import ShapeCell
+        from repro.serving import EngineConfig, ServingEngine
+
+        cfg, mesh, params = _model(codec)
+        plan = make_plan(cfg, ShapeCell("serve_decode", MAX_SEQ,
+                                        NUM_SLOTS, "decode"), mesh)
+        hp = TR.init_draft_head_params(cfg, plan, mesh,
+                                       jax.random.PRNGKey(5), 2)
+        hp = dict(hp)
+        hp["w2"] = 0.3 * jax.random.normal(jax.random.PRNGKey(6),
+                                           hp["w2"].shape, hp["w2"].dtype)
+        full = dict(params)
+        full["draft_heads"] = hp
+        kw = dict(spec_k=2, drafter="heads")
+        _HEADS_ENGINES[codec] = (
+            _engines()[1] if codec == "none" else _build_engine(codec),
+            ServingEngine(cfg, mesh, full,
+                          EngineConfig(**_engine_kw(), **kw)),
+            ServingEngine(cfg, mesh, full,
+                          EngineConfig(**_engine_kw(), **kw,
+                                       async_depth=1)))
+    return _HEADS_ENGINES[codec]
+
+
+def _check_heads_schedule(schedule, codec):
+    """Heads-drafter parity leg: the same schedule through the sync
+    vanilla engine, the heads verify engine, and the heads verify
+    engine under the async pipeline — greedy streams identical even
+    though the (random) heads propose garbage, and all three drain
+    clean.  The ngram drafter can never pipeline (it needs committed
+    tokens on the host), so its counter staying zero is the structural
+    no-host-join assertion's other half."""
+    from repro.serving import Request
+    ref_eng, heads, heads_async = _heads_engines(codec)
+    rng = np.random.RandomState(97)
+    reqs = [Request(rid=i, prompt=list(rng.randint(0, VOCAB, plen)),
+                    max_new_tokens=mnt)
+            for i, (plen, mnt) in enumerate(schedule)]
+
+    def clone(r):
+        return Request(rid=r.rid, prompt=r.prompt,
+                       max_new_tokens=r.max_new_tokens)
+
+    ref = ref_eng.run([clone(r) for r in reqs])
+    res_h = heads.run([clone(r) for r in reqs])
+    res_ha = heads_async.run([clone(r) for r in reqs])
+    assert set(ref) == set(res_h) == set(res_ha)
+    for r in reqs:
+        assert res_h[r.rid] == ref[r.rid], (
+            "heads", codec, r.rid, ref[r.rid], res_h[r.rid])
+        assert res_ha[r.rid] == ref[r.rid], (
+            "heads+async", codec, r.rid, ref[r.rid], res_ha[r.rid])
+    for e in (ref_eng, heads, heads_async):
+        _assert_drained(e)
+    # a synchronous heads engine never overlaps dispatches
+    assert heads.pipelined_dispatches == 0
 
 
 def _assert_drained(engine):
@@ -195,6 +266,29 @@ def test_fixed_schedule_async_parity_queue_pressure():
     _check_async_schedule([(1, 1)], "none")
 
 
+def test_fixed_schedule_heads_drafter_parity():
+    """Random draft heads through sync + pipelined verify on the
+    queue-pressure schedule: token-identical to vanilla, drain-clean,
+    and the async heads engine actually overlapped verify dispatches
+    (the no-host-join acceptance assertion) while the ngram engine's
+    counter stayed a structural zero."""
+    _, heads, heads_async = _heads_engines("none")
+    base = heads_async.pipelined_dispatches
+    _check_heads_schedule([(16, 6), (3, 1), (16, 8), (1, 4), (9, 8),
+                           (16, 2), (5, 5)], "none")
+    assert heads_async.pipelined_dispatches > base, \
+        "async heads engine never pipelined a verify dispatch"
+    # the ngram spec engine on the same module: drafting host-side
+    # forces a join per verify step, so it can never overlap
+    _, _, asn_spec = _async_engines("none")
+    assert asn_spec.pipelined_dispatches == 0
+
+
+def test_fixed_schedule_heads_drafter_parity_spike_codec():
+    _check_heads_schedule([(16, 6), (3, 1), (16, 8), (1, 4)],
+                          "spike_fused")
+
+
 def test_async_warmup_and_reset_stats_flush_inflight():
     """``warmup``/``reset_stats`` must drain the pipeline before zeroing
     stats: a pipelined step's tokens can never leak into the measured
@@ -258,6 +352,22 @@ def test_fuzz_async_parity_and_no_leaks(schedule, codec):
     engine for the ``none`` AND ``spike_fused`` codecs, with no slot or
     page leaked through deferred retirement / the free-page limbo."""
     _check_async_schedule(schedule, codec)
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, PREFILL_LEN),
+                          st.integers(1, 8)),
+                min_size=1, max_size=2 * NUM_SLOTS + 1),
+       st.sampled_from(["none", "spike_fused"]))
+def test_fuzz_heads_drafter_parity_and_no_leaks(schedule, codec):
+    """The drafter leg of the identity grid: RANDOM draft heads (their
+    proposals are garbage by construction) through the device-chained
+    heads verify path, sync and pipelined, must stay greedy
+    token-identical to vanilla decode on ANY schedule — the drafter
+    moves which positions get scored per forward, never what commits —
+    and every run drains slot/page/limbo-clean."""
+    _check_heads_schedule(schedule, codec)
 
 
 # ---------------------------------------------------------------------------

@@ -79,6 +79,25 @@ def test_presets_all_produce_arrivals():
         assert len(preset_trace(name, 4.0, seed=0, load=8.0)) > 0, name
 
 
+def test_lowmatch_preset_prompts_have_distinct_tokens():
+    """Every lowmatch prompt is drawn without replacement: no repeated
+    token means no n-gram for prompt-lookup drafting to match, which is
+    the workload the learned-drafter bench compares on."""
+    tr = preset_trace("lowmatch", 4.0, seed=0, prefill_len=16, max_gen=8,
+                      load=8.0)
+    assert len(tr) > 0
+    for r in tr.requests:
+        assert len(set(r.req.prompt)) == len(r.req.prompt)
+    # and the prompt length still clamps to the vocab when oversized
+    big = make_trace([RequestClass("lm", rate=8.0, prompt_len=(40, 40),
+                                   distinct_tokens=True)],
+                     2.0, seed=0, vocab=32)
+    assert big.requests
+    for r in big.requests:
+        assert len(r.req.prompt) == 32
+        assert len(set(r.req.prompt)) == 32
+
+
 # ---------------------------------------------------------------------------
 # monitor math (fake clock, stub engine)
 # ---------------------------------------------------------------------------
@@ -214,6 +233,50 @@ def test_monitor_step_trace_and_wire_bytes():
     rep = mon.report()
     assert rep["queue_depth"]["max"] == 5
     assert rep["pool"]["peak_pages_in_limbo"] == 1
+
+
+def test_monitor_acceptance_math():
+    """Accepted-draft length is the per-tick delta of the engine's
+    commit/verify counters; the report's rate strips the always-kept
+    correction token and normalises by spec_k."""
+
+    class _SpecEngine(_StubEngine):
+        spec_k = 2
+
+        def __init__(self):
+            super().__init__()
+            self.spec_commits = 0
+            self.spec_verifies = 0
+
+    clk = _Clock()
+    eng = _SpecEngine()
+    mon = SLOMonitor(clock=clk)
+    # tick 1: 3 verifies committed 6 tokens -> accepted_len 2.0
+    eng.spec_commits, eng.spec_verifies = 6, 3
+    mon.on_step(eng)
+    # tick 2: +2 verifies, +6 tokens -> accepted_len 3.0
+    clk.t = 0.001
+    eng.spec_commits, eng.spec_verifies = 12, 5
+    mon.on_step(eng)
+    # tick 3: no verify participation -> not a speculative tick
+    clk.t = 0.002
+    mon.on_step(eng)
+    assert [s["accepted_len"] for s in mon.step_trace()] == [2.0, 3.0, 0.0]
+    acc = mon.report()["acceptance"]
+    assert acc["accepted_len"]["n"] == 2
+    assert acc["accepted_len"]["mean"] == pytest.approx(2.5)
+    # mean accepted 2.5 = 1 correction + 1.5 of the 2 drafts kept
+    assert acc["rate"] == pytest.approx(0.75)
+
+
+def test_monitor_acceptance_zero_on_nonspec_runs():
+    """A non-speculative engine (and host-side stubs without the spec
+    counters at all) reports an all-zero acceptance block."""
+    mon = SLOMonitor(clock=_Clock())
+    mon.on_step(_StubEngine())
+    acc = mon.report()["acceptance"]
+    assert acc["rate"] == 0.0
+    assert acc["accepted_len"]["n"] == 0
 
 
 def test_write_trace_roundtrip(tmp_path):
