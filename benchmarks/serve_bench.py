@@ -73,6 +73,17 @@ per-step wire-bytes trace (one JSON line per scheduler tick) that
 — the serving-trace -> NoC co-simulation bridge.  With multiple codecs
 the codec name is inserted before the trace file extension.
 
+The step trace always carries the per-collective ``wire_streams``
+breakdown (psum / head all-gather / partial combine / kv-migrate, from
+``engine.wire_stream_profile()``'s HLO parse of the compiled steps).
+``--cosim`` feeds it through the cycle-level NoC simulator
+(``repro.sim.noc.NocSim.simulate_trace``): each result grows a
+``cosim`` block — simulated joules/token, NoC cycles (and us) per
+token, PE/MEM/Router/EMIO energy breakdown, per-stream wire KB — and
+the run ends with a ranking of every codec/variant by simulated
+joules per served token.  The cycle-level figure is asserted to bound
+the closed-form eq (8) EMIO figure from above.
+
     PYTHONPATH=src python benchmarks/serve_bench.py [--mesh 1x2]
     PYTHONPATH=src python benchmarks/serve_bench.py --spec-k 3
     PYTHONPATH=src python benchmarks/serve_bench.py --async-depth 1
@@ -150,6 +161,14 @@ def main():
     ap.add_argument("--trace-out", default="",
                     help="write the per-step wire-bytes trace (JSONL) "
                          "for repro.sim.noc.emio_cost_from_trace")
+    ap.add_argument("--cosim", action="store_true",
+                    help="run the cycle-level NoC co-simulation over "
+                         "each run's per-collective step trace: adds a "
+                         "'cosim' block (simulated joules/token, NoC "
+                         "cycles/us per token, PE/MEM/Router/EMIO "
+                         "energy) to every result and ranks the "
+                         "codecs/variants by simulated joules per "
+                         "served token")
     args = ap.parse_args()
 
     dp, tp = (int(x) for x in args.mesh.split("x"))
@@ -286,18 +305,14 @@ def main():
 
         engine = ServingEngine(cfg, mesh, params, ecfg)
         engine.warmup(prompts[0])
-        _, per_tok = engine.decode_wire_stats()
-        step_kind = "verify" if engine.spec_k > 0 else "decode"
-        if step_kind == "verify":
-            # per-STEP bytes: one verify step commits num_slots tokens
-            # at accepted_len=1 by the scaling inside verify_wire_stats
-            _, vpt = engine.verify_wire_stats(1.0)
-            step_bytes = vpt * args.slots
-        else:
-            step_bytes = per_tok * args.slots
+        # per-collective per-step wire streams of every compiled step
+        # kind (verify is profiled at accepted_len=1, so its stream sum
+        # is the per-STEP bytes of one verify step)
+        profile = engine.wire_stream_profile()
+        per_tok = sum(profile["decode"].values()) / args.slots
         # attach AFTER warmup so the throwaway request's ticks never
         # contaminate the step trace or the SLO percentiles
-        monitor = SLOMonitor(wire_bytes_per_step={step_kind: step_bytes})
+        monitor = SLOMonitor(wire_streams_per_step=profile)
         engine.observers.append(monitor)
 
         # timestamp every scheduler tick so per-step host wall time is
@@ -355,9 +370,29 @@ def main():
         rep["wire_kb_per_tok"] = per_tok / 1e3
         # EMIO co-simulation headline off the same step trace (migration
         # bytes are folded into each tick's wire_bytes by the monitor)
-        from repro.sim.noc import emio_cost_from_trace
-        emio = emio_cost_from_trace(monitor.step_trace())
+        from repro.sim.noc import NocConfig, NocSim, emio_cost_from_trace
+        trace_steps = monitor.step_trace()
+        emio = emio_cost_from_trace(trace_steps)
         rep["emio_cycles_per_token"] = emio["emio_cycles_per_token"]
+        if args.cosim:
+            cosim = NocSim(NocConfig()).simulate_trace(
+                trace_steps).to_dict()
+            cosim["emio_closed_form_cycles_per_token"] = \
+                emio["emio_cycles_per_token"]
+            assert (cosim["noc_cycles_per_token"] + 1e-9
+                    >= cosim["emio_closed_form_cycles_per_token"]), (
+                f"{key}: cycle-level NoC simulation "
+                f"({cosim['noc_cycles_per_token']:.1f} cyc/tok) below "
+                f"the closed-form EMIO bound "
+                f"({emio['emio_cycles_per_token']:.1f} cyc/tok)")
+            rep["cosim"] = cosim
+            print(f"# cosim {key}: "
+                  f"J/tok={cosim['joules_per_token']:.3e} "
+                  f"noc us/tok={cosim['noc_us_per_token']:.2f} "
+                  f"cyc/tok={cosim['noc_cycles_per_token']:.0f} "
+                  f"(closed-form "
+                  f"{emio['emio_cycles_per_token']:.0f})",
+                  file=sys.stderr)
         rep["mig_kb_per_req"] = (engine.migrated_wire_bytes / 1e3
                                  / max(engine.migrations, 1)
                                  if engine.migrations else 0.0)
@@ -374,6 +409,17 @@ def main():
             monitor.write_trace(path)
             print(f"# step trace ({key}): {path}", file=sys.stderr)
 
+    if args.cosim:
+        ranked = sorted(bench_results.items(),
+                        key=lambda kv: kv[1]["cosim"]["joules_per_token"])
+        print("# cosim ranking (simulated joules per served token):",
+              file=sys.stderr)
+        for i, (k, r) in enumerate(ranked, 1):
+            c = r["cosim"]
+            print(f"#   {i}. {k}: {c['joules_per_token']:.3e} J/tok, "
+                  f"{c['noc_us_per_token']:.2f} NoC-us/tok",
+                  file=sys.stderr)
+
     if args.out:
         run_cfg = {
             "bench": "serve_bench", "arch": args.arch, "mesh": args.mesh,
@@ -385,6 +431,7 @@ def main():
             "kv_wire": args.kv_wire, "drafter": args.drafter,
             "lowmatch": args.lowmatch,
             "draft_train_steps": args.draft_train_steps,
+            "cosim": args.cosim,
         }
         write_bench(args.out, make_bench_payload(run_cfg, bench_results))
         print(f"# BENCH_serve.json: {args.out}", file=sys.stderr)

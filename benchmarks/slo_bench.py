@@ -25,6 +25,16 @@ numbers measure *latency* degradation, never correctness.
 ``repro.sim.noc.emio_cost_from_trace`` prices on the paper's EMIO
 die-to-die model, and the summary line prints that bridge's per-token
 EMIO cycles/energy alongside the host-side numbers.
+
+The step trace always carries the per-collective ``wire_streams``
+breakdown (from ``engine.wire_stream_profile()``).  ``--cosim`` prices
+it cycle-level through ``repro.sim.noc.NocSim.simulate_trace``: each
+codec's result grows a ``cosim`` block (simulated joules/token, NoC
+cycles/us per token, PE/MEM/Router/EMIO energy breakdown, per-stream
+wire KB) and the run ends with a codec ranking by simulated joules per
+served token — asserted to bound the closed-form eq (8) figure from
+above.  The CI bench-smoke lane runs ``--smoke --cosim`` and gates on
+the block's schema.
 """
 from __future__ import annotations
 
@@ -91,11 +101,20 @@ def main():
                     help="write a bench_serve/v1 BENCH_serve.json here")
     ap.add_argument("--trace-out", default="",
                     help="write the per-step wire-bytes trace (JSONL)")
+    ap.add_argument("--cosim", action="store_true",
+                    help="cycle-level NoC co-simulation over each "
+                         "codec's per-collective step trace: adds a "
+                         "'cosim' block (simulated joules/token, NoC "
+                         "cycles/us per token, energy breakdown) per "
+                         "codec and ranks codecs by simulated joules "
+                         "per served token")
     ap.add_argument("--per-class", action="store_true",
                     help="print the per-tenant TTFT/TPOT split")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI trace: 2 slots, short horizon, one "
-                         "fault of each kind, single-codec spike wire")
+                         "fault of each kind, single-codec spike wire "
+                         "on a 1x2 mesh (so boundary collectives — and "
+                         "the --cosim figures — are non-vacuous)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -108,6 +127,10 @@ def main():
         args.codecs = "spike_fused"
         args.p_preempt = args.p_suspend = 0.08
         args.max_faults = 4
+        if args.mesh == "1x1":
+            # a 1x1 mesh compiles no collectives: every wire/cosim
+            # figure would be a vacuous 0
+            args.mesh = "1x2"
 
     dp, tp = (int(x) for x in args.mesh.split("x"))
     os.environ.setdefault(
@@ -124,7 +147,7 @@ def main():
                                ServingEngine, SLOMonitor, SLOTargets,
                                make_bench_payload, preset_trace, replay,
                                write_bench)
-    from repro.sim.noc import emio_cost_from_trace
+    from repro.sim.noc import NocConfig, NocSim, emio_cost_from_trace
 
     mesh = make_mesh((dp, tp), ("data", "model"))
     max_seq = args.prompt_len + args.gen
@@ -164,15 +187,12 @@ def main():
         engine = ServingEngine(cfg, mesh, params, ecfg)
         engine.warmup(trace.requests[0].req.prompt)
 
-        _, per_tok = engine.decode_wire_stats()
-        step_kind = "verify" if engine.spec_k > 0 else "decode"
-        if step_kind == "verify":
-            _, vpt = engine.verify_wire_stats(1.0)
-            step_bytes = vpt * args.slots
-        else:
-            step_bytes = per_tok * args.slots
+        # per-collective per-step wire streams of every compiled step
+        # kind (verify profiled at accepted_len=1)
+        profile = engine.wire_stream_profile()
+        per_tok = sum(profile["decode"].values()) / args.slots
         monitor = SLOMonitor(targets=targets,
-                             wire_bytes_per_step={step_kind: step_bytes})
+                             wire_streams_per_step=profile)
         injector = FaultInjector(plan_f)
         results = replay(engine, trace, observers=(monitor, injector),
                          steps_per_s=args.steps_per_s, wall=args.wall)
@@ -181,7 +201,25 @@ def main():
         rep = monitor.report()
         rep["wire_kb_per_tok"] = per_tok / 1e3
         bench_results[codec] = rep
-        emio = emio_cost_from_trace(monitor.step_trace())
+        trace_steps = monitor.step_trace()
+        emio = emio_cost_from_trace(trace_steps)
+        if args.cosim:
+            cosim = NocSim(NocConfig()).simulate_trace(
+                trace_steps).to_dict()
+            cosim["emio_closed_form_cycles_per_token"] = \
+                emio["emio_cycles_per_token"]
+            assert (cosim["noc_cycles_per_token"] + 1e-9
+                    >= cosim["emio_closed_form_cycles_per_token"]), (
+                f"{codec}: cycle-level NoC simulation below the "
+                f"closed-form EMIO bound")
+            rep["cosim"] = cosim
+            print(f"# cosim {codec}: "
+                  f"J/tok={cosim['joules_per_token']:.3e} "
+                  f"noc us/tok={cosim['noc_us_per_token']:.2f} "
+                  f"cyc/tok={cosim['noc_cycles_per_token']:.0f} "
+                  f"(closed-form "
+                  f"{emio['emio_cycles_per_token']:.0f})",
+                  file=sys.stderr)
         slo = rep["slo"]
         print(f"slo/{codec},{rep['step_us']['p50']:.1f},"
               f"tok/s={rep['tokens_per_s']:.1f} "
@@ -212,6 +250,17 @@ def main():
             monitor.write_trace(path)
             print(f"# step trace ({codec}): {path}", file=sys.stderr)
 
+    if args.cosim:
+        ranked = sorted(bench_results.items(),
+                        key=lambda kv: kv[1]["cosim"]["joules_per_token"])
+        print("# cosim ranking (simulated joules per served token):",
+              file=sys.stderr)
+        for i, (k, r) in enumerate(ranked, 1):
+            c = r["cosim"]
+            print(f"#   {i}. {k}: {c['joules_per_token']:.3e} J/tok, "
+                  f"{c['noc_us_per_token']:.2f} NoC-us/tok",
+                  file=sys.stderr)
+
     if args.out:
         run_cfg = {
             "bench": "slo_bench", "arch": args.arch, "mesh": args.mesh,
@@ -231,6 +280,7 @@ def main():
                        "max_faults": args.max_faults},
             "slo_targets": {"ttft_ms": args.ttft_ms,
                             "tpot_ms": args.tpot_ms},
+            "cosim": args.cosim,
         }
         write_bench(args.out, make_bench_payload(run_cfg, bench_results))
         print(f"# BENCH_serve.json: {args.out}", file=sys.stderr)

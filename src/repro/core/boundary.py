@@ -401,16 +401,20 @@ def coded_head_all_gather(x, codec: BoundaryCodec, axis_name: Axis,
                           axis: int):
     """Gather head-sharded q/k/v across ``axis_name``; int8 wire when
     coded.  Scales ride the same gather (one per token x head), so each
-    segment is decoded with its source shard's scale."""
-    if codec.mode == "none":
-        return lax.all_gather(x, axis_name, axis=axis, tiled=True)
-    s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True),
-                    1e-6) / 127.0
-    wire = jnp.round(x / s).astype(jnp.int8)
-    wire_g = lax.all_gather(wire, axis_name, axis=axis, tiled=True)
-    s_g = lax.all_gather(s, axis_name, axis=axis, tiled=True)
-    return (wire_g.astype(jnp.float32)
-            * s_g.astype(jnp.float32)).astype(x.dtype)
+    segment is decoded with its source shard's scale.  The named scope
+    labels the collectives in HLO metadata so
+    ``launch.roofline.parse_collectives`` can attribute their bytes to
+    the ``head_all_gather`` packet stream."""
+    with jax.named_scope("coded_head_all_gather"):
+        if codec.mode == "none":
+            return lax.all_gather(x, axis_name, axis=axis, tiled=True)
+        s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True),
+                        1e-6) / 127.0
+        wire = jnp.round(x / s).astype(jnp.int8)
+        wire_g = lax.all_gather(wire, axis_name, axis=axis, tiled=True)
+        s_g = lax.all_gather(s, axis_name, axis=axis, tiled=True)
+        return (wire_g.astype(jnp.float32)
+                * s_g.astype(jnp.float32)).astype(x.dtype)
 
 
 def quantize_partial(o):
@@ -434,17 +438,20 @@ def coded_combine_partials(wire, scale, lse, axis_names: Axis, out_dtype):
     shard contributes its epilogue-quantized partial (``wire``/``scale``
     from the kernel or ``quantize_partial``) plus fp LSE; every rank
     gathers the wire bytes, decodes locally, and performs the weighted
-    sum — spike-accumulation semantics, no fp partial on the wire.
+    sum — spike-accumulation semantics, no fp partial on the wire.  The
+    named scope tags all three gathers as the ``partial_combine`` packet
+    stream for ``launch.roofline.parse_collectives``.
     """
-    wire_g = lax.all_gather(wire, axis_names, axis=0, tiled=False)
-    s_g = lax.all_gather(scale, axis_names, axis=0, tiled=False)
-    lse_g = lax.all_gather(lse, axis_names, axis=0, tiled=False)
-    m = jnp.max(lse_g, axis=0)
-    w = jnp.exp(lse_g - m)
-    dec = wire_g.astype(jnp.float32) * s_g.astype(jnp.float32)
-    o_sum = jnp.sum(dec * w[..., None], axis=0)
-    l_sum = jnp.sum(w, axis=0)
-    return (o_sum / jnp.maximum(l_sum[..., None], 1e-30)).astype(out_dtype)
+    with jax.named_scope("coded_combine_partials"):
+        wire_g = lax.all_gather(wire, axis_names, axis=0, tiled=False)
+        s_g = lax.all_gather(scale, axis_names, axis=0, tiled=False)
+        lse_g = lax.all_gather(lse, axis_names, axis=0, tiled=False)
+        m = jnp.max(lse_g, axis=0)
+        w = jnp.exp(lse_g - m)
+        dec = wire_g.astype(jnp.float32) * s_g.astype(jnp.float32)
+        o_sum = jnp.sum(dec * w[..., None], axis=0)
+        l_sum = jnp.sum(w, axis=0)
+        return (o_sum / jnp.maximum(l_sum[..., None], 1e-30)).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -580,14 +587,17 @@ def coded_kv_migrate(x, codec: BoundaryCodec, axis_name: str,
     to spike against, exactly as at the decode-step head boundaries).
     Like every boundary collective, the wire/scale ppermute pair is
     what ``launch.roofline.parse_collectives`` sees, so the migration
-    is priced like any other coded collective.  Forward-only (serving).
+    is priced like any other coded collective — and the named scope tags
+    the ppermute pair as the ``kv_migrate`` packet stream.  Forward-only
+    (serving).
     """
-    if codec.mode == "none":
-        return lax.ppermute(x, axis_name, perm)
-    wire, s = kv_wire_encode(x)
-    wire = lax.ppermute(wire, axis_name, perm)
-    s = lax.ppermute(s, axis_name, perm)
-    return (wire.astype(jnp.float32) * s).astype(x.dtype)
+    with jax.named_scope("coded_kv_migrate"):
+        if codec.mode == "none":
+            return lax.ppermute(x, axis_name, perm)
+        wire, s = kv_wire_encode(x)
+        wire = lax.ppermute(wire, axis_name, perm)
+        s = lax.ppermute(s, axis_name, perm)
+        return (wire.astype(jnp.float32) * s).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -7,7 +7,14 @@
 cost_analysis() of an SPMD-partitioned module reports per-device numbers;
 collective wire bytes are parsed from ``compiled.as_text()`` (the
 partitioned module, so shapes are per-device shards) with per-kind
-ring-traffic factors.
+ring-traffic factors.  Beyond the aggregate, ``parse_collectives`` emits
+one ``CollectiveOp`` record per collective — HLO kind, semantic stream
+(psum / head_all_gather / partial_combine / kv_migrate / ..., recovered
+from the ``jax.named_scope`` labels ``repro.core.boundary`` puts on every
+coded boundary), participant group size from the op's ``replica_groups``,
+wire bytes, and whether the payload rides the coded (int8/int4) wire —
+the per-collective packet streams the serving engine threads into the
+cycle-level NoC co-simulation (``repro.sim.noc.NocSim.simulate_trace``).
 
 Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
 ~50 GB/s/link ICI.
@@ -15,9 +22,9 @@ Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from typing import Optional
+import warnings
+from typing import List, Optional
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -29,13 +36,36 @@ _DTYPE_BYTES = {
     "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
 }
 
+#: result dtypes that mark a coded-wire payload (spike counts / absmax
+#: int8 / packed uint4); a collective whose every result leaf is one of
+#: these moves boundary packets, not fp activations
+_CODED_DTYPES = frozenset({"s8", "u8", "s4", "u4", "pred"})
+
 _COLL_RE = re.compile(
     r"=\s*(\([^)]*\)|[a-z0-9\[\],{}<=]+)\s+"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
     r"(-start)?\(", re.IGNORECASE)
 _SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
                        r"s16|u16|s8|u8|pred|s4|u4)\[([0-9,]*)\]")
-_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}|replica_groups=\[(\d+),(\d+)\]")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+_NPART_RE = re.compile(r"num_partitions=(\d+)")
+
+#: ``jax.named_scope`` labels (repro.core.boundary) -> semantic stream;
+#: first substring match on the op's ``metadata.op_name`` wins
+_STREAM_HINTS = (
+    ("kv_migrate", "kv_migrate"),
+    ("combine_partials", "partial_combine"),
+    ("quantize_partial", "partial_combine"),
+    ("head_all_gather", "head_all_gather"),
+)
+#: fallback: HLO op kind -> stream for collectives without a scope hint
+_KIND_STREAMS = {
+    "all-reduce": "psum",
+    "reduce-scatter": "psum",
+    "all-gather": "all_gather",
+    "all-to-all": "all_to_all",
+    "collective-permute": "permute",
+}
 
 
 def _shape_bytes(type_str: str) -> float:
@@ -59,14 +89,43 @@ def _group_size(line: str) -> Optional[int]:
     return None
 
 
+def _stream_of(op_name: str, kind: str) -> str:
+    for hint, stream in _STREAM_HINTS:
+        if hint in op_name:
+            return stream
+    return _KIND_STREAMS.get(kind, kind)
+
+
+def _is_coded(type_str: str) -> bool:
+    dts = [dt for dt, _ in _SHAPE_RE.findall(type_str)]
+    return bool(dts) and all(dt in _CODED_DTYPES for dt in dts)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One parsed collective: the unit of a per-collective packet stream."""
+
+    kind: str                  # HLO op: all-gather | all-reduce | ...
+    stream: str                # semantic stream (psum | head_all_gather |
+    #                            partial_combine | kv_migrate | ...)
+    group: int                 # participant count (replica_groups)
+    t_bytes: float             # result tensor bytes (per device)
+    bytes: float               # ring-model wire bytes (per device)
+    coded: bool                # int8/int4 payload: the coded boundary
+    op_name: str = ""          # HLO metadata op_name (scope trail)
+
+
 @dataclasses.dataclass
 class CollectiveStats:
     counts: dict
     wire_bytes: float          # per-device bytes on the ICI
     by_kind: dict
+    ops: List[CollectiveOp] = dataclasses.field(default_factory=list)
+    by_stream: dict = dataclasses.field(default_factory=dict)
 
 
-def parse_collectives(hlo_text: str, default_group: int = 2) -> CollectiveStats:
+def parse_collectives(hlo_text: str,
+                      default_group: Optional[int] = None) -> CollectiveStats:
     """Sum per-device ICI traffic over every collective op.
 
     Ring-model factors (n = participant count, T = tensor bytes as printed
@@ -76,17 +135,38 @@ def parse_collectives(hlo_text: str, default_group: int = 2) -> CollectiveStats:
       all-reduce        result T:           recv 2*(n-1)/n * T
       all-to-all        result T:           recv (n-1)/n * T
       collective-permute result T:          recv T
+
+    ``n`` is parsed from each op's ``replica_groups`` (explicit or iota
+    form); ops without one fall back to the module's ``num_partitions``
+    header (the all-device group XLA prints as ``{}``), and only when
+    neither is present does ``default_group`` apply — with a warning,
+    because an assumed group size silently mis-scales wire bytes on any
+    mesh whose HLO says otherwise (e.g. tp=4 all-gathers under the old
+    hardwired ``default_group=2``).
     """
     counts: dict = {}
     by_kind: dict = {}
+    by_stream: dict = {}
+    ops: List[CollectiveOp] = []
     total = 0.0
+    unsized = 0
+    m = _NPART_RE.search(hlo_text)
+    num_partitions = int(m.group(1)) if m else None
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)
         if not m:
             continue
         type_str, kind = m.group(1), m.group(2).lower()
         t_bytes = _shape_bytes(type_str)
-        n = _group_size(line) or default_group
+        n = _group_size(line)
+        if n is None:
+            if kind == "collective-permute":
+                n = 2          # point-to-point pairs; bytes are n-free
+            else:
+                n = num_partitions
+            if n is None:
+                unsized += 1
+                n = default_group or 2
         if n <= 1:
             continue
         if kind == "all-gather":
@@ -99,10 +179,22 @@ def parse_collectives(hlo_text: str, default_group: int = 2) -> CollectiveStats:
             b = t_bytes * (n - 1) / n
         else:  # collective-permute
             b = t_bytes
+        nm = _OPNAME_RE.search(line)
+        op_name = nm.group(1) if nm else ""
+        stream = _stream_of(op_name, kind)
         counts[kind] = counts.get(kind, 0) + 1
         by_kind[kind] = by_kind.get(kind, 0.0) + b
+        by_stream[stream] = by_stream.get(stream, 0.0) + b
+        ops.append(CollectiveOp(kind, stream, n, t_bytes, b,
+                                _is_coded(type_str), op_name))
         total += b
-    return CollectiveStats(counts, total, by_kind)
+    if unsized:
+        warnings.warn(
+            f"parse_collectives: {unsized} collective(s) carry no "
+            f"replica_groups and the module prints no num_partitions; "
+            f"assuming group size {default_group or 2} — wire bytes may "
+            f"be mis-scaled", RuntimeWarning, stacklevel=2)
+    return CollectiveStats(counts, total, by_kind, ops, by_stream)
 
 
 @dataclasses.dataclass

@@ -108,6 +108,24 @@ SLO harness knobs (``repro.serving.workload`` / ``repro.serving.slo``):
                     ``p_replica_loss``, ``p_suspend``) the
                     ``FaultInjector`` rolls once per tick — same seed,
                     same faults, so identity tests replay exactly.
+``wire_streams_     ``SLOMonitor`` pricing table: step kind -> per-
+per_step``          collective {stream -> bytes} of one compiled step,
+                    from ``engine.wire_stream_profile()`` (psum / head
+                    all-gather / partial combine / kv-migrate, parsed
+                    out of the step HLO).  Every tick then records a
+                    ``wire_streams`` split summing to its scalar
+                    ``wire_bytes``; unknown step kinds warn instead of
+                    silently pricing at 0, and migration bytes pending
+                    at drain flush into a terminal ``drain`` event.
+``--cosim``         ``serve_bench`` / ``slo_bench`` flag: feed each
+                    run's step trace through the cycle-level NoC
+                    simulator (``repro.sim.noc.NocSim.simulate_trace``)
+                    — per-codec ``cosim`` block (simulated joules/token,
+                    NoC cycles/us per token, PE/MEM/Router/EMIO energy,
+                    per-stream wire KB) in BENCH_serve.json, plus a
+                    codec ranking by simulated joules per served token.
+                    Schema-gated by ``validate_bench``, which also
+                    enforces cycle-level >= closed-form eq (8) EMIO.
 ==================  =====================================================
 """
 from .draft import NGramDrafter

@@ -1699,6 +1699,34 @@ class ServingEngine:
             params=(self.params if self.drafter_kind == "heads"
                     else None))
 
+    def wire_stream_profile(self):
+        """Per-collective wire streams of each compiled step kind.
+
+        Returns ``{step kind -> {stream kind -> bytes}}`` where the
+        bytes are one device step's TOTAL die-to-die traffic across the
+        mesh, split by semantic stream (``psum`` / ``head_all_gather`` /
+        ``partial_combine`` / ... — the ``CollectiveStats.by_stream``
+        classification from ``launch.roofline.parse_collectives``).  The
+        ``"decode"`` entry is always present; ``"verify"`` joins it when
+        ``spec_k > 0``, so a monitor fed this profile prices BOTH step
+        kinds the engine can emit (a recurrent-family fallback run only
+        ever ticks ``"decode"``).  Feed it to
+        ``SLOMonitor(wire_streams_per_step=...)``: the step trace then
+        carries the per-collective breakdown the cycle-level NoC
+        co-simulation (``repro.sim.noc.NocSim.simulate_trace``) maps
+        onto boundary serdes ports, and the scalar ``wire_bytes`` stays
+        the sum of the streams.
+        """
+        ndev = self.plan.dp_size * self.plan.tp_size
+        stats, _ = self.decode_wire_stats()
+        prof = {"decode": {k: v * ndev
+                           for k, v in sorted(stats.by_stream.items())}}
+        if self.spec_k > 0:
+            vstats, _ = self.verify_wire_stats(1.0)
+            prof["verify"] = {k: v * ndev
+                              for k, v in sorted(vstats.by_stream.items())}
+        return prof
+
     def pool_stats(self) -> dict:
         """KV pool occupancy + bytes, next to the dense baseline.
 

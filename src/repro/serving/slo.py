@@ -8,7 +8,10 @@ callback — no hot-path device work):
     Records the request lifecycle (submit -> first token -> finish,
     preemptions/restarts in between) and one ``StepEvent`` per scheduler
     tick (host latency, step kind, tokens committed, queue depth, pool
-    pressure, wire bytes).  ``report()`` reduces that to the production
+    pressure, wire bytes — split per collective stream when the engine's
+    ``wire_stream_profile()`` is registered, so the step trace can drive
+    the cycle-level NoC co-simulation instead of the closed-form EMIO
+    bridge).  ``report()`` reduces that to the production
     questions: TTFT/TPOT/step-latency p50/p95/p99 and SLO *attainment*
     — the fraction of finished requests meeting the ``SLOTargets`` —
     plus queue/pool pressure peaks and fault counts.  TTFT is measured
@@ -38,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -100,6 +104,12 @@ class StepEvent:
     accepted_len: float = 0.0        # mean tokens committed per (slot,
     #                                  verify-step) this tick — 0.0 on
     #                                  non-speculative ticks
+    #: per-collective split of ``wire_bytes`` (stream kind -> bytes:
+    #: psum / head_all_gather / partial_combine / kv_migrate / ...);
+    #: always sums to ``wire_bytes``, empty when only the scalar was
+    #: registered
+    wire_streams: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -119,17 +129,31 @@ class SLOMonitor:
     Attach with ``engine.observers.append(monitor)`` (or pass it to
     ``workload.replay``) and call ``monitor.on_step(engine)`` after
     every tick — ``engine.run(..., on_step=monitor.on_step)`` does.
-    ``wire_bytes_per_step`` maps step kind -> total die-to-die bytes of
-    one compiled step (from ``engine.decode_wire_stats()``), so the
-    step trace can feed the NoC co-simulation
-    (``repro.sim.noc.emio_cost_from_trace``).
+    ``wire_streams_per_step`` maps step kind -> {stream kind -> bytes}
+    of one compiled step (from ``engine.wire_stream_profile()``), so
+    every tick records a per-collective ``wire_streams`` breakdown the
+    cycle-level NoC co-simulation (``repro.sim.noc.NocSim.
+    simulate_trace``) can map onto serdes ports; ``wire_bytes_per_step``
+    is the scalar-only legacy form (kept for callers without a stream
+    profile — the closed-form ``emio_cost_from_trace`` bridge needs only
+    the scalar).  A tick whose step kind has NO registered bytes would
+    silently price at 0, so it warns (once per kind): register every
+    kind the engine can emit — ``decode`` AND ``verify``.
     """
 
     def __init__(self, targets: Optional[SLOTargets] = None,
                  wire_bytes_per_step: Optional[Dict[str, float]] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 wire_streams_per_step: Optional[
+                     Dict[str, Dict[str, float]]] = None):
         self.targets = targets or SLOTargets()
-        self.wire_bytes_per_step = wire_bytes_per_step or {}
+        self.wire_streams_per_step = {
+            k: dict(v) for k, v in (wire_streams_per_step or {}).items()}
+        self.wire_bytes_per_step = dict(wire_bytes_per_step or {})
+        for k, streams in self.wire_streams_per_step.items():
+            self.wire_bytes_per_step.setdefault(
+                k, float(sum(streams.values())))
+        self._warned_kinds: set = set()
         self.clock = clock
         self.requests: Dict[object, _ReqRecord] = {}
         self.steps: List[StepEvent] = []
@@ -237,14 +261,56 @@ class SLOMonitor:
         acc_len = d_acc / d_ver if d_ver > 0 else 0.0
         if d_ver > 0:
             self.accepted_lens.append(acc_len)
+        if (d_steps > 0 and self.wire_bytes_per_step
+                and kind not in self.wire_bytes_per_step
+                and kind not in self._warned_kinds):
+            # a registered-but-incomplete pricing table would silently
+            # record 0 wire bytes for every tick of this kind, skewing
+            # the co-simulation — warn once per kind instead
+            self._warned_kinds.add(kind)
+            warnings.warn(
+                f"SLOMonitor: step kind {kind!r} has no registered wire "
+                f"bytes (known: {sorted(self.wire_bytes_per_step)}); its "
+                "ticks are priced at 0 bytes — register every kind the "
+                "engine can emit (decode AND verify)", RuntimeWarning,
+                stacklevel=2)
+        base = self.wire_bytes_per_step.get(kind, 0.0) * d_steps
+        if kind in self.wire_streams_per_step:
+            streams = {k: v * d_steps for k, v
+                       in self.wire_streams_per_step[kind].items()}
+        elif base > 0:
+            streams = {"total": base}
+        else:
+            streams = {}
+        if mig > 0:
+            streams["kv_migrate"] = streams.get("kv_migrate", 0.0) + mig
         self.steps.append(StepEvent(
             t=now, dt=dt, kind=kind, tokens=max(d_tokens, 0),
             queue_depth=engine.queue_depth, active=engine.num_active,
             pages_in_use=alloc.pages_in_use,
             pages_in_limbo=alloc.pages_in_limbo,
-            wire_bytes=self.wire_bytes_per_step.get(kind, 0.0) * d_steps
-            + mig,
-            mig_bytes=mig, accepted_len=acc_len))
+            wire_bytes=base + mig,
+            mig_bytes=mig, accepted_len=acc_len, wire_streams=streams))
+
+    def _flush_pending_mig(self):
+        """Fold migration bytes still pending after the LAST tick into a
+        terminal ``kind="drain"`` event so they are never dropped from
+        wire accounting (a migration admitted on the final tick has no
+        following ``on_step`` to absorb it).  ``dt=0.0`` keeps the event
+        out of the step-latency percentiles."""
+        mig, self._pending_mig_bytes = self._pending_mig_bytes, 0.0
+        if mig <= 0:
+            return
+        last = self.steps[-1] if self.steps else None
+        self.steps.append(StepEvent(
+            t=self._t_last if self._t_last is not None else self.clock(),
+            dt=0.0, kind="drain", tokens=0,
+            queue_depth=last.queue_depth if last else 0,
+            active=last.active if last else 0,
+            pages_in_use=last.pages_in_use if last else 0,
+            pages_in_limbo=last.pages_in_limbo if last else 0,
+            wire_bytes=mig, mig_bytes=mig,
+            wire_streams={"kv_migrate": mig}))
 
     # -- reductions --------------------------------------------------------
 
@@ -254,6 +320,7 @@ class SLOMonitor:
 
     def report(self) -> dict:
         """Structured SLO report (the per-codec payload of BENCH JSON)."""
+        self._flush_pending_mig()
         fin = self._finished()
         t = self.targets
         ttft = [(r.t_first - r.t_submit) * 1e3 for r in fin]
@@ -340,14 +407,18 @@ class SLOMonitor:
 
     def step_trace(self) -> List[dict]:
         """Per-tick records for ``--trace-out`` / the NoC bridge:
-        each dict carries the fields ``emio_cost_from_trace`` consumes
-        (``wire_bytes``, ``tokens``) plus scheduling context."""
+        each dict carries the fields the cycle-level co-simulation
+        (``NocSim.simulate_trace``: ``wire_streams``, ``tokens``) and
+        the closed-form bridge (``emio_cost_from_trace``:
+        ``wire_bytes``, ``tokens``) consume, plus scheduling context."""
+        self._flush_pending_mig()
         return [{"t": s.t, "dt_us": s.dt * 1e6, "kind": s.kind,
                  "tokens": s.tokens, "queue_depth": s.queue_depth,
                  "active": s.active, "pages_in_use": s.pages_in_use,
                  "pages_in_limbo": s.pages_in_limbo,
                  "wire_bytes": s.wire_bytes, "mig_bytes": s.mig_bytes,
-                 "accepted_len": s.accepted_len}
+                 "accepted_len": s.accepted_len,
+                 "wire_streams": dict(s.wire_streams)}
                 for s in self.steps]
 
     def write_trace(self, path: str):
@@ -525,6 +596,32 @@ def validate_bench(payload: dict):
                     f"BENCH schema: {w}.slo.attainment {v} not in [0,1]")
         faults = _need(res, "faults", w, dict)
         _need(faults, "preemptions", f"{w}.faults", int)
+        if "cosim" in res:
+            _validate_cosim(res["cosim"], f"{w}.cosim")
+
+
+def _validate_cosim(cosim: dict, where: str):
+    """Schema + invariant gate for the optional per-codec ``cosim``
+    block (``--cosim`` benches): cycle-level NoC figures must be
+    present, numeric, and bound the closed-form EMIO figure from
+    above — the simulator models strictly more (per-stream serdes
+    batching, deserialize, hop fill) than eq (8)."""
+    if not isinstance(cosim, dict):
+        raise ValueError(f"BENCH schema: {where} must be a dict")
+    for k in ("joules_per_token", "noc_cycles_per_token",
+              "noc_us_per_token", "emio_closed_form_cycles_per_token"):
+        _need(cosim, k, where, (int, float))
+    energy = _need(cosim, "energy_breakdown", where, dict)
+    for k in ("PE", "MEM", "Router", "EMIO"):
+        _need(energy, k, f"{where}.energy_breakdown", (int, float))
+    if (cosim["noc_cycles_per_token"] + 1e-9
+            < cosim["emio_closed_form_cycles_per_token"]):
+        raise ValueError(
+            f"BENCH schema: {where} cycle-level "
+            f"noc_cycles_per_token={cosim['noc_cycles_per_token']} below "
+            "closed-form emio_closed_form_cycles_per_token="
+            f"{cosim['emio_closed_form_cycles_per_token']} — the "
+            "simulator must upper-bound eq (8)")
 
 
 def write_bench(path: str, payload: dict):

@@ -16,12 +16,33 @@ Architecture constants follow Tables 1-3:
 The model mapper consumes layer shapes (neurons in/out, MACs) — either
 hand-specified or derived from a ``repro.configs`` ModelConfig — and
 produces per-component latency/energy, reproducing Figs 10-13.
+
+Two serving-trace front-ends bridge the SLO harness into this model:
+
+``NocSim.simulate_trace(steps)``
+    Cycle-level: maps each step's per-collective packet streams (the
+    ``wire_streams`` breakdown an ``SLOMonitor`` records when the
+    engine's ``wire_stream_profile()`` is registered) onto the
+    boundary serdes ports and router hops individually — each
+    collective pays its own eq (8) serialization (ceil over the ``nc``
+    peripheral ports: dependent collectives cannot pack partial serdes
+    batches), pipelined deserialization, and hop fill, and contributes
+    PE/MEM/Router/EMIO energy per §4.4.  Returns per-step and total
+    cycles + an energy breakdown; ``TraceReport.to_dict()`` is the
+    ``cosim`` block the ``--cosim`` benches embed in BENCH_serve.json.
+
+``emio_cost_from_trace(steps)``
+    Closed-form cross-check: prices the aggregate ``wire_bytes`` scalar
+    with eq (8) directly (floor over the aggregate).  The cycle-level
+    total is guaranteed to bound it from above —
+    ``sum(ceil(pb_i/nc)) >= floor(sum(pb_i)/nc)`` plus the
+    deserialize/hop terms — which tests/test_sim.py asserts.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Sequence
+from typing import Dict, List, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -243,6 +264,68 @@ class NocSim:
             cores_prev = cores
         return SimReport(reports, cfg)
 
+    # ------------------------------------------------------------------
+    def simulate_trace(self, steps: Sequence[dict]) -> TraceReport:
+        """Cycle-level pricing of a serving step trace's boundary
+        traffic, one collective stream at a time.
+
+        ``steps`` is an ``SLOMonitor.step_trace()`` record list (or the
+        ``slo.load_trace`` of its JSONL): each record's
+        ``wire_streams`` maps collective stream kind (psum /
+        head_all_gather / partial_combine / kv_migrate / ...) to the
+        die-to-die bytes that collective moved during the tick; records
+        without a stream split fall back to pricing the aggregate
+        ``wire_bytes`` as one ``"total"`` stream.
+
+        Each stream of ``pb`` bytes (one 8-bit boundary packet per
+        byte) pays, over the ``nc`` peripheral serdes ports:
+
+        * ``ceil(pb / nc) * cycles_ser`` serialization batches — ceil,
+          not eq (8)'s floor-on-the-aggregate, because collectives
+          execute in dependency order and cannot pack a partial final
+          serdes batch with the next collective's packets;
+        * ``pb`` pipelined transfer cycles plus one ``cycles_des``
+          deserialization drain and a ``grid/4 + 1`` hop fill from the
+          interior compute cores to the peripheral ring (eqs 4-5's
+          average-hop shape for a boundary-bound stream);
+        * energy per §4.4: ``e_d2d`` per packet at the boundary,
+          ``e_hop`` per packet-hop getting there, one spike/activation
+          accumulate (``e_acc``) per packet of boundary encode/decode
+          work, and an SRAM read + write (``2 * e_sram_rw``).
+
+        Summed over streams this strictly upper-bounds the closed-form
+        ``emio_cost_from_trace`` figure for the same trace.
+        """
+        cfg = self.cfg
+        nc = max(1, cfg.boundary_cores)
+        hops = cfg.grid / 4.0 + 1.0
+        out: List[TraceStepReport] = []
+        for s in steps:
+            streams = dict(s.get("wire_streams") or {})
+            if not streams:
+                total = float(s.get("wire_bytes", 0.0))
+                if total > 0:
+                    streams = {"total": total}
+            cyc = e_pe = e_mem = e_router = e_emio = 0.0
+            for pb in streams.values():
+                pb = float(pb)
+                if pb <= 0:
+                    continue
+                cyc += (math.ceil(pb / nc) * cfg.cycles_ser + pb
+                        + cfg.cycles_des + hops)
+                e_emio += pb * cfg.e_d2d
+                e_router += pb * hops * cfg.e_hop
+                e_pe += pb * cfg.e_acc
+                e_mem += 2.0 * pb * cfg.e_sram_rw
+            out.append(TraceStepReport(
+                kind=str(s.get("kind", "")),
+                tokens=int(s.get("tokens", 0)), cycles=cyc,
+                e_pe=e_pe, e_mem=e_mem, e_router=e_router,
+                e_emio=e_emio,
+                bytes_by_stream={k: float(v) for k, v in streams.items()
+                                 if float(v) > 0}))
+        return TraceReport(out, cfg)
+
 
 # ---------------------------------------------------------------------------
 # paper benchmark models (§4.1) mapped to layer lists
@@ -309,6 +392,80 @@ PAPER_MODELS = {
 # ---------------------------------------------------------------------------
 # serving-trace -> NoC co-simulation bridge
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TraceStepReport:
+    """Cycle-level cost of one serving tick's boundary traffic."""
+
+    kind: str                       # step kind ("decode"/"verify"/"drain")
+    tokens: int
+    cycles: float                   # serdes + deserialize + hop fill
+    e_pe: float                     # boundary encode/decode accumulates
+    e_mem: float                    # SRAM read (encode) + write (decode)
+    e_router: float                 # hops from compute cores to the ring
+    e_emio: float                   # die-to-die packets (224x hop, §4.4)
+    bytes_by_stream: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def energy(self):
+        return self.e_pe + self.e_mem + self.e_router + self.e_emio
+
+
+@dataclasses.dataclass
+class TraceReport:
+    """``NocSim.simulate_trace`` result: per-step reports + totals."""
+
+    steps: List[TraceStepReport]
+    cfg: NocConfig
+
+    @property
+    def tokens(self):
+        return sum(s.tokens for s in self.steps)
+
+    @property
+    def total_cycles(self):
+        return sum(s.cycles for s in self.steps)
+
+    @property
+    def total_energy(self):
+        return sum(s.energy for s in self.steps)
+
+    def breakdown(self):
+        return {
+            "PE": sum(s.e_pe for s in self.steps),
+            "MEM": sum(s.e_mem for s in self.steps),
+            "Router": sum(s.e_router for s in self.steps),
+            "EMIO": sum(s.e_emio for s in self.steps),
+        }
+
+    def bytes_by_stream(self):
+        out: Dict[str, float] = {}
+        for s in self.steps:
+            for k, v in s.bytes_by_stream.items():
+                out[k] = out.get(k, 0.0) + v
+        return dict(sorted(out.items()))
+
+    def to_dict(self) -> dict:
+        """The per-codec ``cosim`` block of a BENCH_serve/v1 payload
+        (sans the closed-form cross-check figure, which the bench adds
+        from ``emio_cost_from_trace``).  Energy is in normalized-pJ
+        (e_mac = 1.0 pJ at 65 nm), so joules = energy * 1e-12."""
+        toks = max(self.tokens, 1)
+        return {
+            "steps": len(self.steps),
+            "tokens": self.tokens,
+            "noc_cycles": self.total_cycles,
+            "noc_cycles_per_token": self.total_cycles / toks,
+            "noc_us_per_token": (self.total_cycles / toks
+                                 / self.cfg.freq_hz * 1e6),
+            "energy_breakdown": self.breakdown(),
+            "energy_per_token": self.total_energy / toks,
+            "joules_per_token": self.total_energy / toks * 1e-12,
+            "wire_kb_by_stream": {k: v / 1e3
+                                  for k, v in self.bytes_by_stream().items()},
+        }
 
 
 def emio_cost_from_trace(steps: Sequence[dict],

@@ -152,9 +152,75 @@ def scenario_mini_dryrun():
     assert cost.get("flops", 0) > 0
     stats = RL.parse_collectives(compiled.as_text())
     assert stats.wire_bytes > 0 and len(stats.counts) >= 2, stats.counts
+    # bug regression: group sizes come from the HLO (replica_groups /
+    # num_partitions), so wire bytes must be invariant to the caller's
+    # default_group — the old hardwired n=2 guess mis-scaled tp=4 rings
+    for dg in (2, 4, 16):
+        alt = RL.parse_collectives(compiled.as_text(), default_group=dg)
+        assert alt.wire_bytes == stats.wire_bytes, (dg, alt.wire_bytes,
+                                                    stats.wire_bytes)
+    assert all(op.group > 1 for op in stats.ops), \
+        sorted({op.group for op in stats.ops})
+    assert sum(stats.by_stream.values()) == stats.wire_bytes or \
+        abs(sum(stats.by_stream.values()) - stats.wire_bytes) < 1e-6
     ma = compiled.memory_analysis()
     assert ma.temp_size_in_bytes > 0
-    print("mini dryrun OK:", dict(stats.counts))
+    print("mini dryrun OK:", dict(stats.counts), "streams:",
+          sorted(stats.by_stream))
+
+
+def scenario_serving_wire_streams():
+    """Per-collective wire streams of a compiled serving engine on the
+    (2, 4) mesh: ``wire_stream_profile()`` must classify the coded
+    boundary's collectives into semantic streams (head_all_gather from
+    the named scope at minimum, psum/all_gather from kind fallback),
+    sum exactly to the scalar ``decode_wire_stats`` accounting, and —
+    threaded through an ``SLOMonitor`` — reappear per tick in the step
+    trace with the same totals the closed-form and cycle-level NoC
+    bridges then price consistently (cycle-level >= closed form)."""
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.configs.reduced import reduced
+    from repro.launch import specs as SP, train as TR
+    from repro.serving import (EngineConfig, Request, ServingEngine,
+                               SLOMonitor)
+    from repro.sim.noc import NocConfig, NocSim, emio_cost_from_trace
+    mesh = mesh24()
+    cfg = reduced(get_config("qwen1.5-0.5b", hnn_mode="hnn")).replace(
+        dtype=jnp.float32, codec="spike_fused")
+    kw = dict(num_slots=4, max_seq=24, prefill_len=8, page_size=8)
+    plan = SP.make_plan(cfg, ShapeCell("serve_decode", kw["max_seq"],
+                                       kw["num_slots"], "decode"), mesh)
+    params = TR.init_sharded_params(cfg, plan, mesh, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, mesh, params, EngineConfig(**kw))
+    profile = eng.wire_stream_profile()
+    dec = profile["decode"]
+    assert "head_all_gather" in dec, sorted(dec)
+    assert len(dec) >= 2, sorted(dec)
+    stats, per_tok = eng.decode_wire_stats()
+    ndev = 8
+    assert abs(sum(dec.values()) - stats.wire_bytes * ndev) < 1e-6, (
+        sum(dec.values()), stats.wire_bytes * ndev)
+    # thread through a monitor over a real run: per-tick stream splits
+    # must sum to the scalar wire bytes, and the cycle-level NoC figure
+    # must bound the closed-form EMIO figure
+    mon = SLOMonitor(wire_streams_per_step=profile)
+    rng = np.random.RandomState(0)
+    prompts = [list(rng.randint(0, cfg.vocab, 8)) for _ in range(4)]
+    eng.observers.append(mon)
+    eng.run([Request(rid=i, prompt=p, max_new_tokens=6)
+             for i, p in enumerate(prompts)], on_step=mon.on_step)
+    trace = mon.step_trace()
+    assert any(s["wire_bytes"] > 0 for s in trace)
+    for s in trace:
+        assert abs(sum(s["wire_streams"].values()) - s["wire_bytes"]) \
+            < 1e-6, s
+    cosim = NocSim(NocConfig()).simulate_trace(trace)
+    closed = emio_cost_from_trace(trace)
+    assert cosim.total_cycles >= closed["emio_cycles"], (
+        cosim.total_cycles, closed["emio_cycles"])
+    print(f"serving wire streams OK: {sorted(dec)} "
+          f"cyc={cosim.total_cycles:.0f}>=closed={closed['emio_cycles']:.0f}")
 
 
 def scenario_elastic_checkpoint():

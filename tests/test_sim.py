@@ -97,3 +97,114 @@ def test_emio_cost_from_trace_eq8():
     # an empty trace must not divide by zero
     empty = emio_cost_from_trace([], cfg)
     assert empty["tokens"] == 0 and empty["emio_cycles_per_token"] == 0.0
+
+
+def test_emio_cost_from_trace_edge_cases():
+    """Closed-form bridge corners: zero-token steps still price their
+    bytes, mig_bytes-only steps count (migration bytes live inside
+    wire_bytes), and the mig share is surfaced separately."""
+    from repro.sim.noc import emio_cost_from_trace
+
+    cfg = NocConfig()
+    nc = cfg.boundary_cores
+    steps = [
+        {"wire_bytes": 500.0, "tokens": 0},               # drained tick
+        {"wire_bytes": 300.0, "mig_bytes": 300.0,         # mig-only
+         "tokens": 0},
+    ]
+    out = emio_cost_from_trace(steps, cfg)
+    assert out["tokens"] == 0
+    assert out["mig_bytes"] == pytest.approx(300.0)
+    want = (math.floor(500.0 / nc) * cfg.cycles_ser + 500.0
+            + math.floor(300.0 / nc) * cfg.cycles_ser + 300.0)
+    assert out["emio_cycles"] == pytest.approx(want)
+    # per-token figures guard the zero-token denominator
+    assert out["emio_cycles_per_token"] == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# cycle-level trace front-end (NocSim.simulate_trace)
+# ---------------------------------------------------------------------------
+
+
+def _trace():
+    return [
+        {"kind": "decode", "tokens": 4,
+         "wire_streams": {"psum": 1000.0, "head_all_gather": 500.0,
+                          "partial_combine": 120.0},
+         "wire_bytes": 1620.0},
+        {"kind": "decode", "tokens": 4, "wire_bytes": 900.0},  # no split
+        {"kind": "drain", "tokens": 0, "wire_bytes": 300.0,
+         "mig_bytes": 300.0, "wire_streams": {"kv_migrate": 300.0}},
+        {"kind": "decode", "tokens": 2, "wire_bytes": 0.0},    # idle wire
+    ]
+
+
+def test_simulate_trace_exact_per_stream_pricing():
+    """Each stream pays ceil(pb/nc)*cycles_ser + pb + cycles_des + hop
+    fill; energy components follow §4.4 per packet."""
+    from repro.sim.noc import NocSim
+
+    cfg = NocConfig()
+    nc = cfg.boundary_cores
+    hops = cfg.grid / 4.0 + 1.0
+    rep = NocSim(cfg).simulate_trace(_trace())
+    assert len(rep.steps) == 4
+    s0 = rep.steps[0]
+
+    def cyc(pb):
+        return (math.ceil(pb / nc) * cfg.cycles_ser + pb
+                + cfg.cycles_des + hops)
+
+    assert s0.cycles == pytest.approx(cyc(1000.0) + cyc(500.0)
+                                      + cyc(120.0))
+    tot0 = 1620.0
+    assert s0.e_emio == pytest.approx(tot0 * cfg.e_d2d)
+    assert s0.e_router == pytest.approx(tot0 * hops * cfg.e_hop)
+    assert s0.e_pe == pytest.approx(tot0 * cfg.e_acc)
+    assert s0.e_mem == pytest.approx(2.0 * tot0 * cfg.e_sram_rw)
+    # a step without a stream split prices the aggregate as one stream
+    assert rep.steps[1].cycles == pytest.approx(cyc(900.0))
+    assert rep.steps[1].bytes_by_stream == {"total": 900.0}
+    # zero-byte steps are free
+    assert rep.steps[3].cycles == 0.0 and rep.steps[3].energy == 0.0
+    assert rep.tokens == 10
+    d = rep.to_dict()
+    assert d["noc_cycles"] == pytest.approx(rep.total_cycles)
+    assert d["joules_per_token"] == pytest.approx(
+        rep.total_energy / 10 * 1e-12)
+    assert set(d["energy_breakdown"]) == {"PE", "MEM", "Router", "EMIO"}
+    assert d["wire_kb_by_stream"]["kv_migrate"] == pytest.approx(0.3)
+
+
+def test_simulate_trace_bounds_closed_form():
+    """Acceptance invariant: the cycle-level total is >= the closed-form
+    eq (8) figure for the same trace — per-stream ceil plus deserialize
+    and hop fill can only add cycles over floor-on-the-aggregate."""
+    from repro.sim.noc import NocSim, emio_cost_from_trace
+
+    for cfg in (NocConfig(), NocConfig(cores_per_chip=16),
+                NocConfig(cores_per_chip=4)):
+        sim = NocSim(cfg)
+        for trace in (_trace(), [],
+                      [{"tokens": 1, "wire_bytes": 3.0}],
+                      [{"tokens": 0, "wire_streams": {"a": 1.0, "b": 1.0,
+                                                      "c": 1.0}}]):
+            cyc = sim.simulate_trace(trace).total_cycles
+            closed = emio_cost_from_trace(trace, cfg)["emio_cycles"]
+            assert cyc >= closed, (cfg.cores_per_chip, trace)
+
+
+def test_simulate_trace_empty_and_streamless():
+    """Edge cases: an empty trace and all-zero steps produce a valid,
+    all-zero report (no division by zero in to_dict)."""
+    from repro.sim.noc import NocSim
+
+    rep = NocSim(NocConfig()).simulate_trace([])
+    d = rep.to_dict()
+    assert d["steps"] == 0 and d["tokens"] == 0
+    assert d["noc_cycles"] == 0 and d["joules_per_token"] == 0.0
+    rep2 = NocSim(NocConfig()).simulate_trace(
+        [{"kind": "decode", "tokens": 0, "wire_bytes": 0.0}])
+    assert rep2.total_cycles == 0.0 and rep2.total_energy == 0.0
+    assert rep2.to_dict()["wire_kb_by_stream"] == {}

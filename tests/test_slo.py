@@ -8,6 +8,7 @@ engine-in-the-loop counterparts (fault identity, drain cleanliness)
 live in tests/test_faults.py.
 """
 import json
+import warnings
 
 import numpy as np
 import pytest
@@ -235,6 +236,121 @@ def test_monitor_step_trace_and_wire_bytes():
     assert rep["pool"]["peak_pages_in_limbo"] == 1
 
 
+def test_monitor_wire_streams_split_and_scaling():
+    """A registered stream profile lands a per-collective breakdown in
+    every StepEvent, scaled per DEVICE step, and always summing to the
+    scalar wire_bytes; migration bytes appear as a kv_migrate stream."""
+    clk = _Clock()
+    eng = _StubEngine()
+    mon = SLOMonitor(clock=clk, wire_streams_per_step={
+        "decode": {"psum": 60.0, "head_all_gather": 40.0}})
+    # scalar derived from the stream sums, no separate registration
+    assert mon.wire_bytes_per_step == {"decode": 100.0}
+    eng.decode_steps, eng.tokens_generated = 1, 2
+    mon.on_step(eng)
+    clk.t = 0.001
+    eng.decode_steps, eng.tokens_generated = 3, 6   # 2 steps this tick
+    mon.on_migrate("r0", 0, 1, 25)
+    mon.on_step(eng)
+    trace = mon.step_trace()
+    assert trace[0]["wire_streams"] == {"psum": 60.0,
+                                        "head_all_gather": 40.0}
+    assert trace[1]["wire_streams"] == {"psum": 120.0,
+                                        "head_all_gather": 80.0,
+                                        "kv_migrate": 25.0}
+    for s in trace:
+        assert sum(s["wire_streams"].values()) == pytest.approx(
+            s["wire_bytes"])
+
+
+def test_monitor_scalar_only_falls_back_to_total_stream():
+    """Callers without a stream profile still get a priceable trace:
+    the scalar is recorded as one 'total' stream."""
+    clk = _Clock()
+    eng = _StubEngine()
+    mon = SLOMonitor(wire_bytes_per_step={"decode": 64.0}, clock=clk)
+    eng.decode_steps = 1
+    mon.on_step(eng)
+    assert mon.step_trace()[0]["wire_streams"] == {"total": 64.0}
+
+
+def test_monitor_warns_on_unknown_step_kind():
+    """Bug regression: an incomplete pricing table used to silently
+    record 0 wire bytes for unregistered step kinds.  Now a mixed-kind
+    trace warns once per unknown kind (and never for registered ones or
+    when no pricing was registered at all)."""
+
+    class _SpecEngine(_StubEngine):
+        spec_k = 2                       # ticks are kind="verify"
+
+    clk = _Clock()
+    eng = _SpecEngine()
+    # "verify" missing from the registered table -> warn
+    mon = SLOMonitor(wire_bytes_per_step={"decode": 100.0}, clock=clk)
+    eng.decode_steps = 1
+    with pytest.warns(RuntimeWarning, match="verify"):
+        mon.on_step(eng)
+    # ...but only once per kind
+    clk.t = 0.001
+    eng.decode_steps = 2
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        mon.on_step(eng)
+    # a registered kind never warns
+    mon2 = SLOMonitor(wire_bytes_per_step={"verify": 10.0}, clock=_Clock())
+    eng2 = _SpecEngine()
+    eng2.decode_steps = 1
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        mon2.on_step(eng2)
+    # an unpriced monitor (no table at all) stays silent too
+    mon3 = SLOMonitor(clock=_Clock())
+    eng3 = _SpecEngine()
+    eng3.decode_steps = 1
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        mon3.on_step(eng3)
+
+
+def test_monitor_flushes_migration_on_last_tick():
+    """Bug regression: migration bytes arriving after the LAST tick
+    (admission at drain) used to be dropped from wire accounting.  They
+    now flush into a terminal dt=0 'drain' event, exactly once."""
+    clk = _Clock()
+    eng = _StubEngine()
+    mon = SLOMonitor(wire_bytes_per_step={"decode": 10.0}, clock=clk)
+    eng.decode_steps, eng.queue_depth = 1, 2
+    mon.on_step(eng)
+    mon.on_migrate("r9", 0, 1, 500)      # no further on_step
+    trace = mon.step_trace()
+    assert len(trace) == 2
+    drain = trace[-1]
+    assert drain["kind"] == "drain"
+    assert drain["dt_us"] == 0.0
+    assert drain["tokens"] == 0
+    assert drain["wire_bytes"] == 500.0
+    assert drain["mig_bytes"] == 500.0
+    assert drain["wire_streams"] == {"kv_migrate": 500.0}
+    assert drain["queue_depth"] == 2     # context copied from last tick
+    # total wire bytes conserved: 10 (step) + 500 (migration)
+    assert sum(s["wire_bytes"] for s in trace) == pytest.approx(510.0)
+    # flush is idempotent: report() + another step_trace() add nothing
+    rep = mon.report()
+    assert rep["migration"]["kb_total"] == pytest.approx(0.5)
+    assert len(mon.step_trace()) == 2
+    # dt=0 keeps the drain event out of the step-latency percentiles
+    assert rep["step_us"]["n"] == 0
+
+
+def test_monitor_flush_without_pending_is_noop():
+    mon = SLOMonitor(clock=_Clock())
+    eng = _StubEngine()
+    mon.on_step(eng)
+    assert len(mon.step_trace()) == 1
+    mon.report()
+    assert len(mon.step_trace()) == 1
+
+
 def test_monitor_acceptance_math():
     """Accepted-draft length is the per-tick delta of the engine's
     commit/verify counters; the report's rate strips the always-kept
@@ -358,3 +474,38 @@ def test_bench_schema_rejects_bad_payloads(tmp_path):
                                "results": {"none": {}}}))
     with pytest.raises(ValueError):
         load_bench(str(bad))
+
+
+def _cosim(noc_cpt=1500.0, emio_cpt=1200.0):
+    return {"joules_per_token": 1e-9, "noc_cycles_per_token": noc_cpt,
+            "noc_us_per_token": noc_cpt / 200.0,
+            "emio_closed_form_cycles_per_token": emio_cpt,
+            "energy_breakdown": {"PE": 1.0, "MEM": 2.0, "Router": 3.0,
+                                 "EMIO": 4.0}}
+
+
+def test_bench_schema_cosim_block():
+    """The optional per-codec cosim block is schema-gated: required
+    keys, an energy breakdown, and the cycle-level >= closed-form EMIO
+    invariant."""
+    res = {**_result(), "cosim": _cosim()}
+    make_bench_payload({"bench": "t", "cosim": True}, {"none": res})
+    # a result WITHOUT the block still validates (cosim is opt-in)
+    make_bench_payload({"bench": "t"}, {"none": _result()})
+    # missing required key
+    r = {**_result(), "cosim": _cosim()}
+    del r["cosim"]["noc_us_per_token"]
+    with pytest.raises(ValueError):
+        make_bench_payload({"bench": "t"}, {"none": r})
+    # missing energy component
+    r = {**_result(), "cosim": _cosim()}
+    del r["cosim"]["energy_breakdown"]["Router"]
+    with pytest.raises(ValueError):
+        make_bench_payload({"bench": "t"}, {"none": r})
+    # cycle-level simulation must bound the closed-form figure above
+    r = {**_result(), "cosim": _cosim(noc_cpt=1000.0, emio_cpt=1200.0)}
+    with pytest.raises(ValueError, match="upper-bound"):
+        make_bench_payload({"bench": "t"}, {"none": r})
+    # equality (both zero, e.g. a 1x1 mesh) is fine
+    r = {**_result(), "cosim": _cosim(noc_cpt=0.0, emio_cpt=0.0)}
+    make_bench_payload({"bench": "t"}, {"none": r})
